@@ -1,0 +1,234 @@
+"""Paper-reproduction benchmarks: one entry per MASK table/figure.
+
+Each function runs the vectorized simulator over the paper's workload
+bundles and emits (metric rows, paper-claimed value) so EXPERIMENTS.md can
+show ours vs. theirs side by side. Results cache to reports/sim/ as JSON.
+
+  fig3   — shared-L2-TLB baseline vs page-walk-cache baseline vs ideal
+  fig16  — weighted speedup: MASK vs GPU-MMU vs Static (headline +45.2%)
+  fig17  — component stack: MASK-TLB / MASK-Cache / MASK-DRAM
+  fig18  — unfairness (max slowdown) reduction (-22.4%)
+  tab3   — shared L2 TLB hit rates (49.3% -> 73.9%)
+  tab4   — bypass-cache hit rate (66.7%)
+  tab5   — L2 data-cache hit rate for TLB requests (70.7% -> 98.3%)
+  fig19  — DRAM latency for TLB vs data requests under MASK-DRAM
+  fig20  — scalability with concurrent app count (1..3)
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+import numpy as np
+
+from repro.sim.runner import run_batch
+from repro.sim.workloads import BENCHES, CATEGORY, hmr_class, pair_workloads
+
+REPORT_DIR = Path(__file__).resolve().parent.parent / "reports" / "sim"
+CYCLES = 60_000
+N_PAIRS = 20     # of the 35 sampled pairs (CPU-budget subset; --full for all)
+
+
+def _cache(name: str, fn, force=False):
+    REPORT_DIR.mkdir(parents=True, exist_ok=True)
+    f = REPORT_DIR / f"{name}.json"
+    if f.exists() and not force:
+        return json.loads(f.read_text())
+    out = fn()
+    f.write_text(json.dumps(out, default=float))
+    return out
+
+
+def _pairs(n=N_PAIRS):
+    return pair_workloads()[:n]
+
+
+def _solo_ipc(design: str, benches: List[str], cycles=CYCLES) -> Dict[str, float]:
+    stats = run_batch(design, [(b, None) for b in benches], cycles=cycles)
+    return {b: float(s["ipc"][0]) for b, s in zip(benches, stats)}
+
+
+def _pair_metrics(design: str, pairs, solo: Dict[str, float], cycles=CYCLES):
+    stats = run_batch(design, pairs, cycles=cycles)
+    rows = []
+    for (a, b), s in zip(pairs, stats):
+        ws = s["ipc"][0] / max(solo[a], 1e-9) + s["ipc"][1] / max(solo[b], 1e-9)
+        ms = max(solo[a] / max(s["ipc"][0], 1e-9),
+                 solo[b] / max(s["ipc"][1], 1e-9))
+        rows.append({
+            "pair": f"{a}_{b}", "hmr": hmr_class((a, b)),
+            "weighted_speedup": float(ws), "max_slowdown": float(ms),
+            "ipc": [float(x) for x in s["ipc"]],
+            "l2_tlb_hit": [float(x) for x in s["l2_hit_rate"]],
+            "bypass_hit": [float(x) for x in s["byp_hit_rate"]],
+            "l2c_tlb_hit": float(s["l2c_tlb_hit_rate"]),
+            "walk_lat": [float(x) for x in s["walk_lat"]],
+            "dram_tlb_lat": [float(x) for x in s["dram_tlb_lat"]],
+            "dram_data_lat": [float(x) for x in s["dram_data_lat"]],
+        })
+    return rows
+
+
+def _design_data(design: str, n_pairs=N_PAIRS, cycles=CYCLES, force=False):
+    pairs = _pairs(n_pairs)
+    benches = sorted({b for p in pairs for b in p})
+
+    def compute():
+        solo = _solo_ipc(design, benches, cycles)
+        return {"solo": solo,
+                "pairs": _pair_metrics(design, pairs, solo, cycles)}
+
+    return _cache(f"design_{design}_{n_pairs}p", compute, force)
+
+
+def _sweep(designs, n_pairs=N_PAIRS, cycles=CYCLES, force=False):
+    return {d: _design_data(d, n_pairs, cycles, force) for d in designs}
+
+
+# ---------------------------------------------------------------- figures
+
+def fig3(force=False):
+    data = _sweep(["gpu-mmu", "pwc", "ideal"], force=force)
+    ws = {d: np.mean([r["weighted_speedup"] for r in data[d]["pairs"]])
+          for d in data}
+    return {
+        "ours": {d: float(v) for d, v in ws.items()},
+        "ours_shared_vs_pwc_pct": float((ws["gpu-mmu"] / ws["pwc"] - 1) * 100),
+        "paper": {"shared_l2_tlb_vs_pwc_pct": 13.8},
+    }
+
+
+def fig16(force=False):
+    data = _sweep(["gpu-mmu", "mask", "static", "ideal"], force=force)
+    ws = {d: np.mean([r["weighted_speedup"] for r in data[d]["pairs"]])
+          for d in data}
+    return {
+        "ours": {d: float(v) for d, v in ws.items()},
+        "ours_mask_vs_gpummu_pct": float((ws["mask"] / ws["gpu-mmu"] - 1) * 100),
+        "ours_mask_vs_ideal_pct": float((ws["mask"] / ws["ideal"] - 1) * 100),
+        "paper": {"mask_vs_gpummu_pct": 45.2, "mask_vs_ideal_pct": -23.0},
+    }
+
+
+def fig17(force=False):
+    data = _sweep(["gpu-mmu", "mask-tlb", "mask-cache", "mask-dram", "mask"],
+                  force=force)
+    ws = {d: np.mean([r["weighted_speedup"] for r in data[d]["pairs"]])
+          for d in data}
+    base = ws["gpu-mmu"]
+    return {
+        "ours_pct_over_gpummu": {d: float((v / base - 1) * 100)
+                                 for d, v in ws.items()},
+        "paper": {"mask-cache_pct": 17.6, "mask-dram_pct": 0.83,
+                  "mask_pct": 45.2},
+    }
+
+
+def fig18(force=False):
+    data = _sweep(["gpu-mmu", "mask", "static"], force=force)
+    ms = {d: np.mean([r["max_slowdown"] for r in data[d]["pairs"]])
+          for d in data}
+    return {
+        "ours": {d: float(v) for d, v in ms.items()},
+        "ours_mask_vs_gpummu_pct": float((1 - ms["mask"] / ms["gpu-mmu"]) * 100),
+        "ours_mask_vs_static_pct": float((1 - ms["mask"] / ms["static"]) * 100),
+        "paper": {"unfairness_reduction_vs_gpummu_pct": 22.4,
+                  "unfairness_reduction_vs_static_pct": 30.7},
+    }
+
+
+def _hit_by_hmr(rows, key):
+    out = {}
+    for h in (0, 1, 2):
+        vals = [v for r in rows if r["hmr"] == h for v in (
+            r[key] if isinstance(r[key], list) else [r[key]])]
+        if vals:
+            out[f"{h}HMR"] = float(np.mean(vals))
+    all_vals = [v for r in rows for v in (
+        r[key] if isinstance(r[key], list) else [r[key]])]
+    out["avg"] = float(np.mean(all_vals))
+    return out
+
+
+def tab3(force=False):
+    data = _sweep(["gpu-mmu", "mask-tlb"], force=force)
+    return {
+        "ours": {d: _hit_by_hmr(data[d]["pairs"], "l2_tlb_hit") for d in data},
+        "paper": {"gpu-mmu": {"avg": 0.493}, "mask-tlb": {"avg": 0.739}},
+    }
+
+
+def tab4(force=False):
+    data = _sweep(["gpu-mmu", "mask-tlb"], force=force)
+    return {
+        "ours": _hit_by_hmr(data["mask-tlb"]["pairs"], "bypass_hit"),
+        "paper": {"avg": 0.667},
+    }
+
+
+def tab5(force=False):
+    data = _sweep(["gpu-mmu", "mask-cache"], force=force)
+    return {
+        "ours": {d: _hit_by_hmr(data[d]["pairs"], "l2c_tlb_hit") for d in data},
+        "paper": {"gpu-mmu": {"avg": 0.707}, "mask-cache": {"avg": 0.983}},
+    }
+
+
+def fig19(force=False):
+    data = _sweep(["gpu-mmu", "mask-dram"], force=force)
+    out = {}
+    for d in data:
+        rows = data[d]["pairs"]
+        out[d] = {
+            "dram_tlb_lat": float(np.mean([np.mean(r["dram_tlb_lat"])
+                                           for r in rows])),
+            "dram_data_lat": float(np.mean([np.mean(r["dram_data_lat"])
+                                            for r in rows])),
+        }
+    return {"ours": out,
+            "paper": "TLB DRAM latency > data latency under FR-FCFS; "
+                     "MASK-DRAM reduces TLB latency (up to 10.6%)"}
+
+
+def fig20(force=False):
+    """Scalability 1..3 apps (3-app runs use n_apps=3 config)."""
+    from repro.sim.config import SimConfig
+    from repro.core.mask import design as mk_design
+    from repro.sim.runner import _compiled_batch_run, _stats, SimState
+    from repro.sim.workloads import app_matrix
+    import jax
+    import jax.numpy as jnp
+
+    TRIPLES = [("3DS", "HISTO", "BLK"), ("MM", "RED", "CONS")]
+
+    def compute():
+        out = {}
+        for d in ("gpu-mmu", "mask", "ideal"):
+            per_n = {}
+            # 2-app numbers from the main sweep
+            data = _sweep(["gpu-mmu", "mask", "ideal"])
+            per_n["2"] = float(np.mean(
+                [r["weighted_speedup"] for r in data[d]["pairs"]]))
+            # 3-app
+            cfg = SimConfig(n_apps=3, sim_cycles=CYCLES, design=mk_design(d))
+            pm = jnp.asarray(np.stack([app_matrix(list(t)) for t in TRIPLES]))
+            final = _compiled_batch_run(cfg)(pm)
+            solo = _solo_ipc(d, sorted({b for t in TRIPLES for b in t}))
+            ws3 = []
+            for i, t in enumerate(TRIPLES):
+                sub = jax.tree_util.tree_map(lambda x: np.asarray(x)[i], final)
+                s = _stats(cfg, SimState(*sub))
+                # 3-way solo baseline uses third-GPU solo ≈ half-GPU solo
+                ws3.append(sum(s["ipc"][j] / max(solo[t[j]], 1e-9)
+                               for j in range(3)))
+            per_n["3"] = float(np.mean(ws3))
+            out[d] = per_n
+        return out
+
+    return _cache("fig20", compute, force)
+
+
+ALL = {"fig3": fig3, "fig16": fig16, "fig17": fig17, "fig18": fig18,
+       "tab3": tab3, "tab4": tab4, "tab5": tab5, "fig19": fig19,
+       "fig20": fig20}

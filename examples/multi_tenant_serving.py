@@ -1,0 +1,38 @@
+"""Multi-tenant serving with the MASK-style 3-class scheduler + paged KV.
+
+Two tenants share one reduced model; the engine's golden/silver/normal
+admission keeps throughput fair while the paged KV pool (with ASID
+protection) holds every sequence's cache.
+
+Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
+"""
+import numpy as np
+
+from repro.launch.serve import build_engine
+from repro.serving import metrics as smet
+from repro.serving.engine import Request
+
+eng = build_engine("qwen3-4b")
+rng = np.random.RandomState(0)
+
+# tenant 0 floods; tenant 1 sends a trickle — fairness should hold
+reqs = [Request(rid=i, tenant=0,
+                prompt=rng.randint(0, eng.cfg.vocab_size, 12), max_new=6)
+        for i in range(6)]
+reqs += [Request(rid=100 + i, tenant=1,
+                 prompt=rng.randint(0, eng.cfg.vocab_size, 12), max_new=6)
+         for i in range(2)]
+for r in reqs:
+    eng.submit(r)
+
+finished = eng.run_until_drained(max_steps=400)
+tput = smet.tenant_throughput(finished, eng.step_count)
+print(f"{len(finished)} requests drained in {eng.step_count} engine steps")
+for t in sorted(tput):
+    n = sum(1 for r in finished if r.tenant == t)
+    lat = np.mean([r.finish_step - r.submit_step
+                   for r in finished if r.tenant == t])
+    print(f"  tenant {t}: {n} reqs, {tput[t]:.2f} tok/step, "
+          f"mean latency {lat:.1f} steps")
+print("\n(the 'silver' rotation guarantees the light tenant is not starved "
+      "by the flood — the paper's Eq. 1 discipline)")

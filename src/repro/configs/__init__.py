@@ -1,0 +1,5 @@
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig  # noqa: F401
+from repro.configs.registry import (  # noqa: F401
+    ARCHS, all_cells, get_model, get_run_config, reduced_model,
+)
+from repro.configs.shapes import ALL_SHAPES, SHAPES_BY_NAME  # noqa: F401

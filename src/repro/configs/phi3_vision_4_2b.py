@@ -1,0 +1,19 @@
+"""phi-3-vision-4.2b [vlm] — phi3-mini backbone + CLIP frontend (stubbed).
+
+32L d_model=3072 32H (MHA: kv=32) d_ff=8192 vocab=32064.
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="phi-3-vision-4.2b",
+    family="vlm",
+    n_layers=32,
+    d_model=3072,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32064,
+    rope_theta=10_000.0,
+    n_patches=64,      # precomputed CLIP patch embeddings prepended (stub frontend)
+)

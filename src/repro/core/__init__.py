@@ -1,0 +1,11 @@
+"""MASK core: the paper's contribution as composable pure-JAX policy modules.
+
+  asid        — address spaces / protection domains (§5.1)
+  page_table  — multi-level radix walks, PTE line addressing (§3)
+  tlb         — set-associative ASID-tagged TLB state (L1/L2/bypass cache)
+  tokens      — TLB-Fill Tokens epoch controller (§5.2)
+  bypass      — TLB-request-aware L2 data-cache bypass (§5.3)
+  dram_sched  — golden/silver/normal scheduler with Eq. (1) quotas (§5.4)
+  mask        — MaskConfig + named design points (ablation grid)
+"""
+from repro.core.mask import ALL_DESIGNS, DesignPoint, MaskConfig, design  # noqa: F401

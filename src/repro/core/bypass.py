@@ -1,0 +1,70 @@
+"""TLB-Request-Aware L2 Bypass (paper §5.3).
+
+Memory requests carry a 3-bit page-walk-depth tag (0 = data, 1..6 = walk
+level, 7 = deeper). Per-level hit/access counters at the shared L2 data
+cache are compared with the data-request hit rate; a walk level may FILL
+the L2 only while its hit rate >= the data hit rate. Root-ward levels have
+high cross-thread reuse (Fig. 9) and keep caching; leaf levels bypass.
+
+Decisions are epoch-based: an epoch's fills follow the PREVIOUS epoch's
+measured rates, and every 4th epoch is a sampling epoch (fills enabled for
+all levels) so a bypassed level's rate can recover if its locality changes
+— without sampling, bypassing is a one-way door (a bypassed level never
+hits again, so its measured rate can never climb back over the data rate).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+MAX_DEPTH = 8  # tag values 0..7
+SAMPLE_EVERY = 4
+
+
+class BypassState(NamedTuple):
+    hits: jax.Array       # (MAX_DEPTH,) per-tag L2 hits this epoch (0 = data)
+    accesses: jax.Array   # (MAX_DEPTH,)
+    rate_q10: jax.Array   # (MAX_DEPTH,) int32 prev-epoch hit rate in 1/1024
+    have_rates: jax.Array  # () bool — at least one epoch measured
+    epoch_idx: jax.Array   # () int32
+
+
+def init() -> BypassState:
+    return BypassState(hits=jnp.zeros((MAX_DEPTH,), jnp.int32),
+                       accesses=jnp.zeros((MAX_DEPTH,), jnp.int32),
+                       rate_q10=jnp.zeros((MAX_DEPTH,), jnp.int32),
+                       have_rates=jnp.array(False),
+                       epoch_idx=jnp.zeros((), jnp.int32))
+
+
+def record(state: BypassState, depth_tag, hit, active) -> BypassState:
+    oh = jax.nn.one_hot(depth_tag, MAX_DEPTH, dtype=jnp.int32)
+    m = active[:, None] * oh
+    return state._replace(hits=state.hits + (m * hit[:, None]).sum(0),
+                          accesses=state.accesses + m.sum(0))
+
+
+def should_fill(state: BypassState, depth_tag) -> jax.Array:
+    """(N,) bool: may this request fill the shared L2 data cache?"""
+    sampling = (state.epoch_idx % SAMPLE_EVERY) == 0
+    level_ok = (state.rate_q10 >= state.rate_q10[0]) | ~state.have_rates \
+        | sampling
+    level_ok = level_ok.at[0].set(True)   # data always fills
+    return level_ok[depth_tag]
+
+
+def epoch_update(state: BypassState) -> BypassState:
+    """Latch this epoch's rates for next epoch's decisions; reset counters."""
+    measured = state.accesses > 32
+    rate = (state.hits * 1024) // jnp.maximum(state.accesses, 1)
+    # unmeasured levels inherit the previous estimate
+    rate = jnp.where(measured, rate, state.rate_q10)
+    return BypassState(
+        hits=jnp.zeros_like(state.hits),
+        accesses=jnp.zeros_like(state.accesses),
+        rate_q10=rate.astype(jnp.int32),
+        have_rates=state.have_rates | measured[0],
+        epoch_idx=state.epoch_idx + 1,
+    )

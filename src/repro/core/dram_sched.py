@@ -1,0 +1,128 @@
+"""Address-Space-Aware DRAM Scheduler (paper §5.4).
+
+Three queues per memory channel:
+
+  Golden  — all translation (page-walk) requests; small FIFO; always first.
+  Silver  — data requests of ONE application at a time; quota per Eq. (1):
+              thres_i = thres_max * (Concurrent_i * WrpStalled_i)
+                        / sum_j (Concurrent_j * WrpStalled_j)
+  Normal  — everything else. FR-FCFS (row hits first) within Silver/Normal;
+            Golden is FIFO (walk requests have poor row locality, fn. 5).
+
+The batched model used by the simulator: each step a channel can service
+``slots`` requests. Requests are ranked (queue priority, row-hit, age) and
+the top ``slots`` complete with latencies derived from row hit/miss; the
+per-bank open row and per-app silver accounting update functionally.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+T_ROW_HIT = 100      # cycles: CAS-only access (GPU clock domain)
+T_ROW_MISS = 250     # cycles: precharge + activate + CAS
+T_QUEUE_UNIT = 50    # serialization per queued-ahead request
+
+
+class DramState(NamedTuple):
+    open_row: jax.Array        # (channels, banks) int32 open row id
+    silver_app: jax.Array      # () int32 — app currently owning Silver
+    silver_left: jax.Array     # () int32 — remaining silver quota
+    conc_walks: jax.Array      # (n_apps,) int32 'Concurrent_i' (6-bit, §5.4)
+    warps_stalled: jax.Array   # (n_apps,) int32 'WrpStalled_i'
+    queue_len: jax.Array       # (channels, 3) int32 backlog per class
+
+
+def init(n_channels: int, n_banks: int, n_apps: int) -> DramState:
+    return DramState(
+        open_row=jnp.full((n_channels, n_banks), -1, jnp.int32),
+        silver_app=jnp.zeros((), jnp.int32),
+        silver_left=jnp.full((), 1, jnp.int32),
+        conc_walks=jnp.zeros((n_apps,), jnp.int32),
+        warps_stalled=jnp.zeros((n_apps,), jnp.int32),
+        queue_len=jnp.zeros((n_channels, 3), jnp.int32),
+    )
+
+
+def silver_quota(state: DramState, thres_max: int = 500) -> jax.Array:
+    """(n_apps,) Eq. (1) thresholds."""
+    w = (state.conc_walks * state.warps_stalled).astype(jnp.float32)
+    tot = jnp.maximum(w.sum(), 1.0)
+    return jnp.maximum((thres_max * w / tot).astype(jnp.int32), 1)
+
+
+def classify(state: DramState, app, is_tlb, mask_enabled: bool):
+    """queue class per request: 0 golden, 1 silver, 2 normal."""
+    if not mask_enabled:
+        return jnp.full(app.shape, 2, jnp.int32)
+    silver = (app == state.silver_app)
+    return jnp.where(is_tlb, 0, jnp.where(silver, 1, 2))
+
+
+def access(state: DramState, channel, bank, row, app, is_tlb, active,
+           mask_enabled: bool, thres_max: int = 500,
+           fr_fcfs: bool = True) -> Tuple[DramState, jax.Array]:
+    """Batched DRAM access model. All args (N,). Returns (state', latency (N,)).
+
+    Latency = service (row hit/miss) + queueing: number of requests this
+    step that rank ahead of you on the same channel (priority-class first,
+    then row-hit-first within class) × T_QUEUE_UNIT + standing backlog.
+    """
+    n_channels, n_banks = state.open_row.shape
+    cls = classify(state, app, is_tlb, mask_enabled)
+
+    row_hit = state.open_row[channel, bank] == row
+    service = jnp.where(row_hit, T_ROW_HIT, T_ROW_MISS)
+
+    # rank = priority ahead of me on my (channel, bank) this step — banks
+    # service in parallel
+    same_ch = (channel[None, :] == channel[:, None]) \
+        & (bank[None, :] == bank[:, None]) & active[None, :]
+    if fr_fcfs:
+        key_other = cls[None, :] * 2 + (~row_hit[None, :])
+        key_mine = (cls * 2 + (~row_hit))[:, None]
+    else:  # pure FCFS
+        key_other = cls[None, :] * 2
+        key_mine = (cls * 2)[:, None]
+    order = jnp.arange(app.shape[0])
+    ahead = same_ch & ((key_other < key_mine)
+                       | ((key_other == key_mine)
+                          & (order[None, :] < order[:, None])))
+    n_ahead = ahead.sum(axis=1)
+
+    backlog = state.queue_len[channel, cls]
+    latency = service + (n_ahead + backlog) * T_QUEUE_UNIT
+    latency = jnp.where(active, latency, 0)
+
+    # ---- state updates ----
+    # open rows: last active request per (channel, bank) wins
+    new_open = state.open_row.at[channel, bank].set(
+        jnp.where(active, row, state.open_row[channel, bank]))
+
+    # silver rotation: consume quota for serviced silver requests
+    served_silver = (active & (cls == 1)).sum(dtype=jnp.int32)
+    left = state.silver_left - served_silver
+    quota = silver_quota(state, thres_max)
+    n_apps = state.conc_walks.shape[0]
+    next_app = (state.silver_app + 1) % n_apps
+    rotate = left <= 0
+    silver_app = jnp.where(rotate, next_app, state.silver_app)
+    silver_left = jnp.where(rotate, quota[next_app], left)
+
+    # decay standing backlog toward observed per-class pressure (EWMA)
+    counts = jnp.zeros((n_channels, 3), jnp.int32).at[channel, cls].add(
+        active.astype(jnp.int32))
+    queue_len = (state.queue_len * 3 + counts) // 4
+
+    return state._replace(open_row=new_open, silver_app=silver_app,
+                          silver_left=silver_left,
+                          queue_len=queue_len), latency
+
+
+def update_pressure(state: DramState, conc_walks, warps_stalled) -> DramState:
+    """Refresh the Eq. (1) inputs (reset each epoch, §5.4)."""
+    return state._replace(
+        conc_walks=jnp.asarray(conc_walks, jnp.int32),
+        warps_stalled=jnp.asarray(warps_stalled, jnp.int32))

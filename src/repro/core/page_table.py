@@ -1,0 +1,84 @@
+"""Multi-level (radix) page tables — functional, array-free address math.
+
+A 4-level walk for VPN v in address space `asid` touches one PTE per level.
+The PTE's *physical line address* is what matters to the memory system (it
+decides L2-cache hits and DRAM rows), so we compute addresses arithmetically
+instead of materializing tables:
+
+    pte_addr(level k) = table_base(asid, k, prefix_k(v)) + entry_offset
+
+Level-0 is nearest the root: its PTE is shared by every VPN with the same
+top-bits prefix — this reproduces the paper's Fig. 9 locality gradient
+(near-root levels hit in the shared L2 cache, leaves thrash).
+
+Translation itself (VPN -> PFN) is a deterministic per-ASID permutation-ish
+hash: correct disjointness across address spaces without storing state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class PageTableConfig:
+    levels: int = 4
+    bits_per_level: int = 9          # x86-64-style 9 bits/level
+    page_bits: int = 12              # 4KB pages
+    pte_bytes: int = 8
+    line_bytes: int = 128            # GPU cache line
+
+    @property
+    def vpn_bits(self) -> int:
+        return self.levels * self.bits_per_level
+
+
+def _mix(x: jnp.ndarray) -> jnp.ndarray:
+    """Cheap deterministic 32-bit mixer (xorshift-multiply)."""
+    x = jnp.asarray(x, jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def pte_line_addresses(cfg: PageTableConfig, asid, vpn) -> jnp.ndarray:
+    """Physical line addresses of the PTEs touched by a walk.
+
+    asid: (...,) int32; vpn: (...,) int32  ->  (..., levels) int32 line ids.
+    Each (asid, level) gets a disjoint region; within a region the PTE index
+    is the VPN prefix for that level, so near-root lines are shared by many
+    pages (locality) and leaf lines are nearly unique per page.
+    """
+    asid = jnp.asarray(asid, jnp.uint32)
+    vpn = jnp.asarray(vpn, jnp.uint32)
+    out = []
+    entries_per_line = cfg.line_bytes // cfg.pte_bytes
+    for k in range(cfg.levels):
+        shift = (cfg.levels - 1 - k) * cfg.bits_per_level
+        prefix = vpn >> shift                      # entry index at level k
+        line = prefix // entries_per_line
+        region = (asid[..., None] if False else asid) * jnp.uint32(cfg.levels + 1) \
+            + jnp.uint32(k + 1)
+        # region base spreads tables apart; keep 32-bit line ids
+        base = _mix(region) & jnp.uint32(0x0FFFFFFF)
+        out.append((base + line).astype(jnp.int32))
+    return jnp.stack(out, axis=-1)
+
+
+def translate(cfg: PageTableConfig, asid, vpn) -> jnp.ndarray:
+    """VPN -> PFN (deterministic, disjoint across ASIDs)."""
+    a = jnp.asarray(asid, jnp.uint32)
+    v = jnp.asarray(vpn, jnp.uint32)
+    return (_mix(a * jnp.uint32(0x9E3779B9) + v) & jnp.uint32(0x3FFFFFFF)) \
+        .astype(jnp.int32)
+
+
+def walk_depth_tag(level: int) -> int:
+    """3-bit page-walk-depth tag carried by memory requests (§5.3):
+    0 = normal data, 1..6 = walk level, 7 = deeper."""
+    return min(level + 1, 7)

@@ -1,0 +1,101 @@
+"""Set-associative, ASID-tagged TLBs as pure-JAX state (batched probe/fill).
+
+One structure covers the paper's three translation caches:
+
+  * per-core L1 TLB  — 64-entry fully associative (n_sets=1), LRU
+  * shared L2 TLB    — 512-entry 16-way, ASID-tagged, LRU
+  * bypass cache     — 32-entry fully associative (MASK §5.2)
+
+State is a NamedTuple of arrays so a bank of TLBs (one per core) is just a
+leading axis + vmap. Fills are batched; when several requests map to the
+same set in one step, one fill wins per set (ports/fill-bandwidth model —
+the paper's L2 TLB has 2 ports per memory partition).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TLBState(NamedTuple):
+    tags: jax.Array      # (sets, ways) int32 vpn  (-1 invalid)
+    asids: jax.Array     # (sets, ways) int32
+    lru: jax.Array       # (sets, ways) int32 last-use time
+    hits: jax.Array      # () int32 cumulative
+    misses: jax.Array    # () int32
+
+
+def init(n_entries: int, n_ways: int) -> TLBState:
+    n_sets = max(n_entries // n_ways, 1)
+    shape = (n_sets, n_ways)
+    return TLBState(
+        tags=jnp.full(shape, -1, jnp.int32),
+        asids=jnp.full(shape, -1, jnp.int32),
+        lru=jnp.zeros(shape, jnp.int32),
+        hits=jnp.zeros((), jnp.int32),
+        misses=jnp.zeros((), jnp.int32),
+    )
+
+
+def probe(state: TLBState, vpn, asid, active, time) -> Tuple[TLBState, jax.Array]:
+    """Batched probe. vpn/asid/active: (N,). Returns (state', hit (N,) bool).
+
+    LRU is updated for hits; hit/miss counters accumulate only active lanes.
+    """
+    n_sets, n_ways = state.tags.shape
+    set_ix = jnp.where(n_sets > 1, vpn % n_sets, 0).astype(jnp.int32)
+    t = state.tags[set_ix]                       # (N, ways)
+    a = state.asids[set_ix]
+    match = (t == vpn[:, None]) & (a == asid[:, None])
+    hit = match.any(axis=1) & active
+    way = jnp.argmax(match, axis=1)
+
+    # LRU touch for hits (scatter; last writer wins on duplicates — fine)
+    lru = state.lru.at[set_ix, way].set(
+        jnp.where(hit, time, state.lru[set_ix, way]))
+    hits = state.hits + hit.sum(dtype=jnp.int32)
+    misses = state.misses + (active & ~hit).sum(dtype=jnp.int32)
+    return state._replace(lru=lru, hits=hits, misses=misses), hit
+
+
+def fill(state: TLBState, vpn, asid, do_fill, time) -> TLBState:
+    """Batched fill with LRU victim selection. do_fill: (N,) bool.
+
+    One fill per set per call (first lane wins) — models fill-port limits.
+    """
+    n_sets, n_ways = state.tags.shape
+    set_ix = jnp.where(n_sets > 1, vpn % n_sets, 0).astype(jnp.int32)
+
+    # first-wins per set: lane i is masked out if an earlier lane fills the
+    # same set
+    order = jnp.arange(vpn.shape[0])
+    same_earlier = (set_ix[None, :] == set_ix[:, None]) & \
+        (order[None, :] < order[:, None]) & do_fill[None, :]
+    do_fill = do_fill & ~same_earlier.any(axis=1)
+
+    victim = jnp.argmin(state.lru[set_ix], axis=1)       # (N,)
+    tags = state.tags.at[set_ix, victim].set(
+        jnp.where(do_fill, vpn, state.tags[set_ix, victim]))
+    asids = state.asids.at[set_ix, victim].set(
+        jnp.where(do_fill, asid, state.asids[set_ix, victim]))
+    lru = state.lru.at[set_ix, victim].set(
+        jnp.where(do_fill, time, state.lru[set_ix, victim]))
+    return state._replace(tags=tags, asids=asids, lru=lru)
+
+
+def flush_asid(state: TLBState, asid: int) -> TLBState:
+    """TLB shootdown for one address space (paper §5.1)."""
+    kill = state.asids == asid
+    return state._replace(
+        tags=jnp.where(kill, -1, state.tags),
+        asids=jnp.where(kill, -1, state.asids))
+
+
+def occupancy_by_asid(state: TLBState, n_asids: int) -> jax.Array:
+    """(n_asids,) live-entry counts — used by fairness diagnostics."""
+    valid = state.tags >= 0
+    return jnp.stack([
+        (valid & (state.asids == a)).sum(dtype=jnp.int32)
+        for a in range(n_asids)])

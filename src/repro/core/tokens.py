@@ -1,0 +1,92 @@
+"""TLB-Fill Tokens (paper §5.2).
+
+Every warp may PROBE the shared L2 TLB; only warps holding a token may FILL
+it. Token counts are per-application, adapted each epoch by hill-climbing on
+the shared-TLB miss-rate delta (the hardware is "30 15-bit token counts with
+30 1-bit token direction entries", §7.5 — i.e. direction-based adjustment):
+
+  * miss rate improved since last epoch  -> keep adjusting in same direction
+  * miss rate worsened                   -> reverse direction
+
+Tokens are handed to warps round-robin in warpID order (paper: even miss
+distribution across warps + token retention beats fancier policies).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class TokenState(NamedTuple):
+    tokens: jax.Array          # (n_apps,) int32 current token count
+    direction: jax.Array       # (n_apps,) int32 in {-1, +1}
+    prev_miss_rate: jax.Array  # (n_apps,) float32
+    epoch_hits: jax.Array      # (n_apps,) int32   (shared-TLB hits this epoch)
+    epoch_misses: jax.Array    # (n_apps,) int32
+    first_epoch: jax.Array     # () bool — no bypassing during warm-up epoch
+
+
+def init(n_apps: int, warps_per_app, initial_frac: float = 0.8) -> TokenState:
+    """warps_per_app: (n_apps,) total warps — InitialTokens = 80% (paper §6)."""
+    warps_per_app = jnp.asarray(warps_per_app, jnp.int32)
+    return TokenState(
+        tokens=jnp.maximum((warps_per_app * initial_frac).astype(jnp.int32), 1),
+        # fills start restricted-downward: the mechanism's premise is that
+        # fewer fillers reduce thrashing; the climb reverses if that fails
+        direction=jnp.full((n_apps,), -1, jnp.int32),
+        prev_miss_rate=jnp.ones((n_apps,), jnp.float32),
+        epoch_hits=jnp.zeros((n_apps,), jnp.int32),
+        epoch_misses=jnp.zeros((n_apps,), jnp.int32),
+        first_epoch=jnp.array(True),
+    )
+
+
+def record(state: TokenState, app, hit, active) -> TokenState:
+    """Accumulate per-app shared-TLB hit/miss counters. app/hit/active: (N,)."""
+    n_apps = state.tokens.shape[0]
+    oh = jax.nn.one_hot(app, n_apps, dtype=jnp.int32)
+    h = (oh * (hit & active)[:, None]).sum(0)
+    m = (oh * ((~hit) & active)[:, None]).sum(0)
+    return state._replace(epoch_hits=state.epoch_hits + h,
+                          epoch_misses=state.epoch_misses + m)
+
+
+def has_token(state: TokenState, app, warp_slot) -> jax.Array:
+    """Round-robin in warpID order: warp w of app a holds a token iff
+    w < tokens[a] (token retention: low warp ids keep theirs across epochs)."""
+    return warp_slot < state.tokens[app]
+
+
+def epoch_update(state: TokenState, warps_per_app, step_frac: float = 0.5,
+                 min_tokens: int = 1) -> TokenState:
+    """End-of-epoch token adjustment (Fig. 13b hill-climb).
+
+    Steps are geometric (x(1±step_frac)): our simulated epochs are ~20x
+    shorter than the paper's 100K cycles, so the equivalent convergence
+    needs multiplicative moves; direction semantics match the hardware's
+    1-bit-direction design."""
+    warps_per_app = jnp.asarray(warps_per_app, jnp.int32)
+    total = jnp.maximum(state.epoch_hits + state.epoch_misses, 1)
+    miss_rate = state.epoch_misses / total
+
+    improved = miss_rate <= state.prev_miss_rate - 0.01
+    new_dir = jnp.where(improved, state.direction, -state.direction)
+    step = jnp.maximum((state.tokens * step_frac).astype(jnp.int32), 1)
+    proposed = state.tokens + new_dir * step
+    new_tokens = jnp.clip(proposed, min_tokens, warps_per_app)
+    # bounce off the clip bounds instead of saturating there
+    new_dir = jnp.where(proposed != new_tokens, -new_dir, new_dir)
+    # during the warm-up epoch no bypassing happens — only install baselines
+    new_tokens = jnp.where(state.first_epoch, state.tokens, new_tokens)
+    new_dir = jnp.where(state.first_epoch, state.direction, new_dir)
+
+    return TokenState(
+        tokens=new_tokens,
+        direction=new_dir,
+        prev_miss_rate=miss_rate,
+        epoch_hits=jnp.zeros_like(state.epoch_hits),
+        epoch_misses=jnp.zeros_like(state.epoch_misses),
+        first_epoch=jnp.array(False),
+    )

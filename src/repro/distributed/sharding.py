@@ -1,0 +1,134 @@
+"""Logical-axis → mesh-axis mapping (DP / TP / FSDP / EP / SP).
+
+Params carry *logical* axis names (repro.models.params.Param.axes); activations
+are constrained with logical names at key points in the model. A ``Sharder``
+binds those names to mesh axes for a given (mesh, RunConfig):
+
+  TP   : heads / kv_heads / ffn / vocab / experts / ssm  -> 'model'
+  DP   : batch                                           -> ('pod','data')
+  FSDP : first large replicated weight axis              -> ('pod','data')
+          (ZeRO-3: params+optimizer sharded; XLA all-gathers at use)
+  SP   : decode KV length ('kvseq')                      -> 'model'
+          (flash-decoding style: each model shard holds S/16 of the cache
+           and computes partial attention; XLA inserts the tiny softmax
+           combine collectives). long_500k (batch=1) additionally spreads
+           kvseq over ('data','model') = 256-way.
+
+Every mapping is divisibility-checked: a dim that does not divide evenly
+falls back to replication (this is why vocab tables are padded to 128).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple, Union
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.models.params import Param
+
+_TP_PARAM_AXES = {"heads", "ffn", "vocab", "experts", "ssm"}
+
+
+class Sharder:
+    def __init__(self, mesh: Mesh, run: RunConfig):
+        self.mesh = mesh
+        self.run = run
+        self.multi_pod = "pod" in mesh.axis_names
+        self.dp: Tuple[str, ...] = (("pod", "data") if self.multi_pod
+                                    else ("data",))
+        self.model_size = mesh.shape["model"]
+        self.dp_size = int(np.prod([mesh.shape[a] for a in self.dp]))
+        # long-context decode with batch < dp: spread KV over data too
+        self.wide_kvseq = (run.seq_shard_decode
+                           and run.shape.global_batch < self.dp_size)
+
+    def _axis_size(self, entry) -> int:
+        if entry is None:
+            return 1
+        if isinstance(entry, tuple):
+            return int(np.prod([self.mesh.shape[a] for a in entry]))
+        return self.mesh.shape[entry]
+
+    def _fit(self, entry, size: Optional[int]):
+        """Divisibility fallback: drop the mapping if it doesn't divide."""
+        if size is None:
+            return entry
+        return entry if (self._axis_size(entry) and
+                         size % self._axis_size(entry) == 0) else None
+
+    # ----------------------------------------------------------- params
+    def param_spec(self, p: Param) -> P:
+        entries = [None] * len(p.shape)
+        # pass 1: tensor parallelism (first fitting TP axis -> 'model')
+        used_model = False
+        for i, (ax, size) in enumerate(zip(p.axes, p.shape)):
+            if ax in _TP_PARAM_AXES and not used_model:
+                e = self._fit("model", size)
+                if e is not None:
+                    entries[i] = e
+                    used_model = True
+        # pass 2: data-axis placement under FSDP.
+        #  * expert weights whose 'ffn' dim is still free get 2D sharding
+        #    (experts->model, ffn->data): consumed in place, no ZeRO gather,
+        #    the w_down contraction psums over data.
+        #  * otherwise ZeRO-3 on the first large 'embed' dim (gathered at use).
+        if self.run.fsdp and len(p.shape) >= 2:
+            cand = None
+            if len(p.shape) >= 3 and "experts" in p.axes:
+                for i, (ax, size) in enumerate(zip(p.axes, p.shape)):
+                    if (ax == "ffn" and entries[i] is None
+                            and size % self.dp_size == 0):
+                        cand = i
+                        break
+            if cand is None:
+                for i, (ax, size) in enumerate(zip(p.axes, p.shape)):
+                    if (ax == "embed" and entries[i] is None and size >= 1024
+                            and size % self.dp_size == 0):
+                        cand = i
+                        break
+            if cand is not None:
+                entries[cand] = self.dp
+        return P(*entries)
+
+    def param_sharding(self, p: Param) -> NamedSharding:
+        return NamedSharding(self.mesh, self.param_spec(p))
+
+    # ------------------------------------------------------- activations
+    def act_spec(self, axes, shape: Optional[Tuple[int, ...]] = None) -> P:
+        spec = []
+        used = set()
+        relax = (self.run.decode_relax_batch and self.run.shape.is_decode
+                 and "kvseq" not in axes)
+        for i, ax in enumerate(axes):
+            size = shape[i] if shape is not None else None
+            if ax == "batch":
+                entry = None if relax else self._fit(self.dp, size)
+            elif ax == "kvseq":
+                e = ("data", "model") if self.wide_kvseq else "model"
+                entry = self._fit(e, size)
+            elif ax in ("heads", "kv_heads", "ffn", "vocab", "experts", "ssm"):
+                entry = self._fit("model", size)
+            else:
+                entry = None
+            # a mesh axis may appear at most once per spec
+            names = (entry if isinstance(entry, tuple)
+                     else (entry,) if entry else ())
+            if any(n in used for n in names):
+                entry = None
+            else:
+                used.update(names)
+            spec.append(entry)
+        return P(*spec)
+
+    def act_sharding(self, axes, shape=None) -> NamedSharding:
+        return NamedSharding(self.mesh, self.act_spec(axes, shape))
+
+    def constrain(self, x: jax.Array, axes) -> jax.Array:
+        return jax.lax.with_sharding_constraint(
+            x, self.act_sharding(axes, tuple(x.shape)))
+
+    # ------------------------------------------------------------- misc
+    def replicated(self) -> NamedSharding:
+        return NamedSharding(self.mesh, P())

@@ -1,0 +1,123 @@
+"""Flash attention Pallas TPU kernel (training/prefill hot path).
+
+Canonical TPU tiling: grid (batch, q_heads, num_q_blocks, num_kv_blocks),
+with the KV index innermost so the (m, l, acc) online-softmax state lives in
+VMEM scratch across KV steps and the output block is written once on the
+last step. GQA is handled in the BlockSpec index maps (q head h reads kv
+head h // group). Causal + sliding-window masking is applied on the diagonal
+tiles; fully-masked tiles are skipped via pl.when (no MXU work issued).
+
+Block shapes are MXU-aligned: block_q x head_dim and block_k x head_dim
+tiles with head_dim a multiple of 128 (dh=64 archs pad in ops.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+            sm_scale: float, causal: bool, window: Optional[int],
+            block_q: int, block_k: int, nk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q_start = qi * block_q
+    k_start = ki * block_k
+
+    # tile visibility (static per grid point only for causal; computed with
+    # scalars so the branch is cheap when skipped)
+    visible = True
+    if causal:
+        visible = k_start <= q_start + block_q - 1
+    if window is not None:
+        visible = jnp.logical_and(
+            visible, k_start + block_k - 1 > q_start - window) \
+            if causal else (k_start + block_k - 1 > q_start - window)
+
+    @pl.when(visible)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, dh)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, dh)
+        v = v_ref[0, 0]                               # (bk, dh)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * sm_scale  # (bq, bk)
+
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
+        kpos = k_start + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
+        mask = jnp.ones((block_q, block_k), jnp.bool_)
+        if causal:
+            mask = mask & (kpos <= qpos)
+        if window is not None:
+            mask = mask & (kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                           # (bq,)
+        m_cur = jnp.max(s, axis=1)
+        m_new = jnp.maximum(m_prev, m_cur)
+        p = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+        m_ref[...] = m_new
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal=True, window: Optional[int] = None,
+                         block_q: int = 512, block_k: int = 512,
+                         interpret: bool = False):
+    """q: (B, H, Sq, dh); k, v: (B, KV, Sk, dh) -> (B, H, Sq, dh)."""
+    B, H, Sq, dh = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    G = H // KV
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0
+    nq, nk = Sq // block_q, Sk // block_k
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    grid = (B, H, nq, nk)
+    kern = functools.partial(
+        _kernel, sm_scale=sm_scale, causal=causal, window=window,
+        block_q=block_q, block_k=block_k, nk=nk)
+
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, block_q, dh), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, qi, ki, _g=G: (b, h // _g, ki, 0)),
+            pl.BlockSpec((1, 1, block_k, dh),
+                         lambda b, h, qi, ki, _g=G: (b, h // _g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, block_q, dh),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, dh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,117 @@
+"""Paged decode attention Pallas TPU kernel.
+
+The serving-side translation layer (DESIGN.md §2b): each sequence's KV
+lives in scattered physical pages; the logical->physical map (block table)
+is prefetched into scalar memory (``PrefetchScalarGridSpec``), and the
+BlockSpec index_map *translates on the access path* — the TPU-idiomatic
+equivalent of a TLB sitting next to the shader core. Pages beyond
+``seq_lens`` are masked (and contribute no state).
+
+Shapes:
+  q:           (B, H, dh)                  one new token per sequence
+  k_pages:     (P_total, page, KV, dh)     physical KV pool
+  v_pages:     (P_total, page, KV, dh)
+  block_table: (B, pages_per_seq) int32    logical page -> physical page
+  seq_lens:    (B,) int32
+Output:        (B, H, dh)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(block_table, seq_lens,            # scalar-prefetch refs
+            q_ref, k_ref, v_ref, o_ref,
+            m_ref, l_ref, acc_ref, *,
+            page: int, n_pages: int, sm_scale: float):
+    b = pl.program_id(0)
+    pi = pl.program_id(1)
+
+    @pl.when(pi == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    seq_len = seq_lens[b]
+    page_start = pi * page
+    live = page_start < seq_len
+
+    @pl.when(live)
+    def _compute():
+        q = q_ref[0].astype(jnp.float32)                    # (H, dh)
+        k = k_ref[0].astype(jnp.float32)                    # (page, KV, dh)
+        v = v_ref[0]
+        H = q.shape[0]
+        KV = k.shape[1]
+        G = H // KV
+        qg = q.reshape(KV, G, q.shape[1])
+        s = jax.lax.dot_general(                             # (KV, G, page)
+            qg, jnp.swapaxes(k, 0, 1),                       # (KV, page, dh)
+            (((2,), (2,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32) * sm_scale
+        pos = page_start + jax.lax.broadcasted_iota(
+            jnp.int32, s.shape, 2)
+        s = jnp.where(pos < seq_len, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (KV, G)
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=2))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=2)
+        m_ref[...] = m_new
+        pv = jax.lax.dot_general(                            # (KV, G, dh)
+            p.astype(v.dtype), jnp.swapaxes(v, 0, 1),
+            (((2,), (1,)), ((0,), (0,))),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[..., None] + pv
+
+    @pl.when(pi == n_pages - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        out = acc_ref[...] / l[..., None]                    # (KV, G, dh)
+        o_ref[0] = out.reshape(o_ref.shape[1], o_ref.shape[2]).astype(o_ref.dtype)
+
+
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens, *,
+                    interpret: bool = False):
+    """See module docstring. Returns (B, H, dh)."""
+    B, H, dh = q.shape
+    P_total, page, KV, _ = k_pages.shape
+    pages_per_seq = block_table.shape[1]
+    sm_scale = 1.0 / (dh ** 0.5)
+
+    kern = functools.partial(_kernel, page=page, n_pages=pages_per_seq,
+                             sm_scale=sm_scale)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, pages_per_seq),
+        in_specs=[
+            pl.BlockSpec((1, H, dh), lambda b, pi, bt, sl: (b, 0, 0)),
+            pl.BlockSpec((1, page, KV, dh),
+                         lambda b, pi, bt, sl: (bt[b, pi], 0, 0, 0)),
+            pl.BlockSpec((1, page, KV, dh),
+                         lambda b, pi, bt, sl: (bt[b, pi], 0, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, H, dh), lambda b, pi, bt, sl: (b, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((KV, H // KV), jnp.float32),
+            pltpu.VMEM((KV, H // KV), jnp.float32),
+            pltpu.VMEM((KV, H // KV, dh), jnp.float32),
+        ],
+    )
+    return pl.pallas_call(
+        kern,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, dh), q.dtype),
+        interpret=interpret,
+    )(block_table, seq_lens, q, k_pages, v_pages)

@@ -1,0 +1,18 @@
+"""jit'd wrapper for paged decode attention."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.paged_attention.kernel import paged_attention as _kernel_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def paged_attention(q, k_pages, v_pages, block_table, seq_lens,
+                    interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel_call(q, k_pages, v_pages, block_table, seq_lens,
+                        interpret=interpret)

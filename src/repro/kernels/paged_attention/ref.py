@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for paged decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_table, seq_lens):
+    """q: (B, H, dh); pages: (P, page, KV, dh); block_table: (B, n) int32."""
+    B, H, dh = q.shape
+    _, page, KV, _ = k_pages.shape
+    n = block_table.shape[1]
+    G = H // KV
+    # gather logical KV: (B, n*page, KV, dh)
+    k = k_pages[block_table].reshape(B, n * page, KV, dh)
+    v = v_pages[block_table].reshape(B, n * page, KV, dh)
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg.astype(jnp.float32),
+                   k.astype(jnp.float32)) / (dh ** 0.5)
+    pos = jnp.arange(n * page)[None, None, None, :]
+    s = jnp.where(pos < seq_lens[:, None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgs,bskd->bkgd", p.astype(v.dtype), v)
+    return o.reshape(B, H, dh)

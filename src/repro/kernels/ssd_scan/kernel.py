@@ -1,0 +1,101 @@
+"""Mamba2 SSD intra-chunk Pallas TPU kernel.
+
+The chunked SSD algorithm splits into (a) a quadratic *intra-chunk* part —
+the compute hot-spot, materializing per-chunk (Q x Q) decay matrices — and
+(b) a cheap sequential inter-chunk state recurrence. This kernel computes
+(a) per (batch, head-tile, chunk): the decay matrix L lives only in VMEM
+(never HBM — the XLA path materializes it at (b, nc, nh, Q, Q) in fp32),
+and emits y_intra plus the per-chunk state contribution / decay needed by
+the recurrence, which ops.py runs in jnp.
+
+Layouts (head-minor tiles, MXU-aligned in hd/ds):
+  x:  (B, nc, Q, nh, hd)    dt(+A applied): dA (B, nc, Q, nh)
+  Bm/Cm: (B, nc, Q, ds)
+outputs:
+  y_intra:  (B, nc, Q, nh, hd)
+  S_chunk:  (B, nc, nh, hd, ds)
+  decay:    (B, nc, nh)      exp(sum dA over chunk)
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _kernel(x_ref, da_ref, b_ref, c_ref,
+            y_ref, s_ref, dec_ref, *, ht: int):
+    # refs (block shapes):
+    #   x: (1, 1, Q, ht, hd)  da: (1, 1, Q, ht)  b,c: (1, 1, Q, ds)
+    #   y: (1, 1, Q, ht, hd)  s: (1, 1, ht, hd, ds)  dec: (1, 1, ht)
+    x = x_ref[0, 0].astype(jnp.float32)            # (Q, ht, hd)
+    da = da_ref[0, 0].astype(jnp.float32)          # (Q, ht)
+    Bm = b_ref[0, 0].astype(jnp.float32)           # (Q, ds)
+    Cm = c_ref[0, 0].astype(jnp.float32)           # (Q, ds)
+    Q = x.shape[0]
+
+    cs = jnp.cumsum(da, axis=0)                    # (Q, ht) inclusive
+    # L[q, s, h] = exp(cs[q] - cs[s]) for s <= q  (segment decay)
+    diff = cs[:, None, :] - cs[None, :, :]         # (Q, Q, ht)
+    qi = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 0)
+    si = jax.lax.broadcasted_iota(jnp.int32, (Q, Q), 1)
+    causal = (si <= qi)[..., None]
+    L = jnp.where(causal, jnp.exp(diff), 0.0)      # (Q, Q, ht)
+
+    G = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (Q, Q)
+    M = G[..., None] * L                           # (Q, Q, ht)
+
+    # y[q, h, p] = sum_s M[q, s, h] * x[s, h, p]
+    y = jax.lax.dot_general(
+        jnp.moveaxis(M, 2, 0), jnp.moveaxis(x, 1, 0),
+        (((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)        # (ht, Q, hd)
+    y_ref[0, 0] = jnp.moveaxis(y, 0, 1).astype(y_ref.dtype)
+
+    # chunk state: S[h, p, d] = sum_s decay_to_end[s,h] * x[s,h,p] * B[s,d]
+    d2e = jnp.exp(cs[-1:, :] - cs)                 # (Q, ht)
+    xw = x * d2e[:, :, None]                       # (Q, ht, hd)
+    s_out = jax.lax.dot_general(
+        jnp.moveaxis(xw, 1, 0), Bm,
+        (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)        # (ht, hd, ds)
+    s_ref[0, 0] = s_out.astype(s_ref.dtype)
+    dec_ref[0, 0] = jnp.exp(cs[-1]).astype(dec_ref.dtype)
+
+
+def ssd_intra_chunk(x, dA, Bm, Cm, *, head_tile: int = 8,
+                    interpret: bool = False):
+    """x: (B, nc, Q, nh, hd); dA: (B, nc, Q, nh); Bm/Cm: (B, nc, Q, ds)."""
+    B, nc, Q, nh, hd = x.shape
+    ds = Bm.shape[-1]
+    ht = min(head_tile, nh)
+    assert nh % ht == 0
+    nt = nh // ht
+
+    grid = (B, nc, nt)
+    kern = functools.partial(_kernel, ht=ht)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, Q, ht, hd), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, Q, ht), lambda b, c, h: (b, c, 0, h)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c, h: (b, c, 0, 0)),
+            pl.BlockSpec((1, 1, Q, ds), lambda b, c, h: (b, c, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, Q, ht, hd), lambda b, c, h: (b, c, 0, h, 0)),
+            pl.BlockSpec((1, 1, ht, hd, ds), lambda b, c, h: (b, c, h, 0, 0)),
+            pl.BlockSpec((1, 1, ht), lambda b, c, h: (b, c, h)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, nc, Q, nh, hd), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh, hd, ds), jnp.float32),
+            jax.ShapeDtypeStruct((B, nc, nh), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, dA, Bm, Cm)

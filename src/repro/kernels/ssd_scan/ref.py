@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: full chunked SSD (delegates to the model module, which
+is itself validated against the O(S) recurrence in tests)."""
+from repro.models.mamba2 import ssd_chunked  # noqa: F401
+
+
+def ssd_recurrence_ref(x, dt, A, B, C):
+    """O(S) sequential recurrence — ground truth for everything SSD.
+
+    x: (b, S, nh, hd); dt: (b, S, nh); A: (nh,); B, C: (b, S, ds).
+    """
+    import jax
+    import jax.numpy as jnp
+
+    b, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def step(h, inp):
+        xt, dtt, Bt, Ct = inp
+        decay = jnp.exp(dtt * A[None])                  # (b, nh)
+        xin = xt * dtt[..., None]                       # (b, nh, hd)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bhp,bd->bhpd", xin.astype(jnp.float32), Bt.astype(jnp.float32))
+        y = jnp.einsum("bhpd,bd->bhp", h, Ct.astype(jnp.float32))
+        return h, y
+
+    xs = (jnp.moveaxis(x, 1, 0), jnp.moveaxis(dt, 1, 0),
+          jnp.moveaxis(B, 1, 0), jnp.moveaxis(C, 1, 0))
+    h, ys = jax.lax.scan(step, h0, xs)
+    return jnp.moveaxis(ys, 0, 1), h                    # (b, S, nh, hd)

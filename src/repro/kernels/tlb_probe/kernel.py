@@ -1,0 +1,85 @@
+"""Batched set-associative TLB probe+fill Pallas TPU kernel.
+
+The simulator's innermost operation: N concurrent requests probe an
+ASID-tagged set-associative array, update LRU on hits, and fill LRU victims
+on misses (first-fill-per-set port model). This is `repro.core.tlb.probe` +
+`fill` fused into one pass so the tag array is read once per step.
+
+State tensors are aliased in/out (input_output_aliases) — the kernel
+mutates the TLB in place, which is exactly what the hardware structure
+does. Request count N is small (≤ a few hundred); the whole problem fits
+one VMEM block, so grid=() and the kernel is a single fused pass.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(tags_ref, asids_ref, lru_ref, vpn_ref, asid_ref, act_ref,
+            time_ref, tags_out, asids_out, lru_out, hit_out):
+    tags = tags_ref[...]          # (sets, ways)
+    asids = asids_ref[...]
+    lru = lru_ref[...]
+    vpn = vpn_ref[...]            # (N,)
+    asid = asid_ref[...]
+    active = act_ref[...] != 0
+    t = time_ref[0]
+
+    n_sets, n_ways = tags.shape
+    N = vpn.shape[0]
+    set_ix = jax.lax.rem(vpn, jnp.int32(n_sets))
+    set_ix = jnp.where(n_sets > 1, set_ix, 0)
+
+    row_tags = tags[set_ix]       # (N, ways)
+    row_asids = asids[set_ix]
+    match = (row_tags == vpn[:, None]) & (row_asids == asid[:, None])
+    hit = match.any(axis=1) & active
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)
+
+    # LRU touch on hit
+    lru = lru.at[set_ix, way].set(jnp.where(hit, t, lru[set_ix, way]))
+
+    # fills: misses only; first active miss per set wins (fill-port model)
+    want = active & ~hit
+    order = jax.lax.broadcasted_iota(jnp.int32, (N, N), 1)
+    mine = jax.lax.broadcasted_iota(jnp.int32, (N, N), 0)
+    same_earlier = (set_ix[None, :] == set_ix[:, None]) & (order < mine) \
+        & want[None, :]
+    do_fill = want & ~same_earlier.any(axis=1)
+
+    victim = jnp.argmin(lru[set_ix], axis=1).astype(jnp.int32)
+    tags = tags.at[set_ix, victim].set(
+        jnp.where(do_fill, vpn, tags[set_ix, victim]))
+    asids = asids.at[set_ix, victim].set(
+        jnp.where(do_fill, asid, asids[set_ix, victim]))
+    lru = lru.at[set_ix, victim].set(
+        jnp.where(do_fill, t, lru[set_ix, victim]))
+
+    tags_out[...] = tags
+    asids_out[...] = asids
+    lru_out[...] = lru
+    hit_out[...] = hit.astype(jnp.int32)
+
+
+def tlb_probe_fill(tags, asids, lru, vpn, asid, active, time, *,
+                   interpret: bool = False):
+    """Fused probe+LRU-touch+fill. Returns (tags', asids', lru', hit)."""
+    n_sets, n_ways = tags.shape
+    N = vpn.shape[0]
+    t_arr = jnp.full((1,), time, jnp.int32)
+    return pl.pallas_call(
+        _kernel,
+        out_shape=[
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        input_output_aliases={0: 0, 1: 1, 2: 2},
+        interpret=interpret,
+    )(tags, asids, lru, vpn, asid.astype(jnp.int32),
+      active.astype(jnp.int32), t_arr)

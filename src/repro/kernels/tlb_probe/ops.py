@@ -1,0 +1,18 @@
+"""jit'd wrapper for the fused TLB probe/fill kernel."""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+
+from repro.kernels.tlb_probe.kernel import tlb_probe_fill as _kernel_call
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def tlb_probe_fill(tags, asids, lru, vpn, asid, active, time,
+                   interpret: Optional[bool] = None):
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    return _kernel_call(tags, asids, lru, vpn, asid, active, time,
+                        interpret=interpret)

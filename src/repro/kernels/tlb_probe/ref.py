@@ -1,0 +1,15 @@
+"""Oracle: the core TLB module's probe+fill pair."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import tlb as tlb_mod
+
+
+def tlb_probe_fill_ref(tags, asids, lru, vpn, asid, active, time):
+    st = tlb_mod.TLBState(tags=tags, asids=asids, lru=lru,
+                          hits=jnp.zeros((), jnp.int32),
+                          misses=jnp.zeros((), jnp.int32))
+    st, hit = tlb_mod.probe(st, vpn, asid, active, time)
+    st = tlb_mod.fill(st, vpn, asid, active & ~hit, time)
+    return st.tags, st.asids, st.lru, hit.astype(jnp.int32)

@@ -1,0 +1,33 @@
+"""Production mesh construction.
+
+A FUNCTION (not module-level constant) so importing never touches jax device
+state. Single pod: (data=16, model=16) = 256 chips. Multi-pod: (pod=2,
+data=16, model=16) = 512 chips.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    import jax
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    need = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < need:
+        raise RuntimeError(
+            f"mesh {shape} needs {need} devices, found {len(devices)} — "
+            "run under dryrun.py (XLA_FLAGS=--xla_force_host_platform_device_count=512)")
+    return jax.make_mesh(shape, axes, devices=devices[:need])
+
+
+def make_host_mesh(model_axis: int = 1):
+    """Tiny mesh over the real local devices (CPU tests / examples)."""
+    import jax
+
+    n = len(jax.devices())
+    data = n // model_axis
+    return jax.make_mesh((data, model_axis), ("data", "model"),
+                         devices=jax.devices()[: data * model_axis])

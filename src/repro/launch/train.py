@@ -1,0 +1,51 @@
+"""Training launcher.
+
+  PYTHONPATH=src python -m repro.launch.train --arch llama3-8b --smoke \
+      --steps 200 --ckpt-dir /tmp/ckpt
+
+--smoke trains the reduced same-family config on local devices; the full
+configs are exercised via the dry-run (no allocation on CPU hosts).
+"""
+from __future__ import annotations
+
+import argparse
+import dataclasses
+
+from repro.configs import get_model, get_run_config, reduced_model
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.train import optimizer as opt_mod
+from repro.train.loop import TrainConfig, train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config on local devices")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    args = ap.parse_args()
+
+    model = get_model(args.arch)
+    if args.smoke:
+        model = reduced_model(model)
+    shape = ShapeConfig("local", seq_len=args.seq_len,
+                        global_batch=args.batch, kind="train")
+    run = RunConfig(model=model, shape=shape, remat=True, microbatches=1,
+                    attn_block_q=min(64, args.seq_len),
+                    attn_block_k=min(64, args.seq_len))
+    tcfg = TrainConfig(steps=args.steps, ckpt_dir=args.ckpt_dir,
+                       ckpt_every=args.ckpt_every,
+                       opt=opt_mod.OptConfig(lr=args.lr, warmup_steps=20))
+    out = train(model, run, tcfg)
+    hist = out["history"]
+    if hist:
+        print(f"first loss {hist[0]['loss']:.4f} -> last {hist[-1]['loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,101 @@
+"""Two-level block tables for the multi-tenant paged KV cache.
+
+Logical layout per tenant: sequence -> logical pages -> physical page slots
+in the shared HBM pool. The *root* level (per-tenant page directory) is tiny
+and hot — it is pinned in the translation cache (the paper's 'levels near
+the root hit' insight, §5.3); leaf rows stream.
+
+Everything is functional: tables are int32 arrays carried in serving state.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+FREE = jnp.int32(-1)
+
+
+class BlockTables(NamedTuple):
+    # leaf: (max_seqs, pages_per_seq) physical page id or -1
+    leaf: jax.Array
+    # root: (max_tenants, seqs_per_tenant) -> seq slot id or -1
+    root: jax.Array
+    # per-physical-page owner ASID (protection domain check, §5.1)
+    owner: jax.Array          # (n_pages,) int32 asid or -1
+    free_head: jax.Array      # () int32 — count of allocated pages
+    free_list: jax.Array      # (n_pages,) int32 permutation of page ids
+
+
+def init(n_pages: int, max_seqs: int, pages_per_seq: int,
+         max_tenants: int, seqs_per_tenant: int) -> BlockTables:
+    return BlockTables(
+        leaf=jnp.full((max_seqs, pages_per_seq), FREE, jnp.int32),
+        root=jnp.full((max_tenants, seqs_per_tenant), FREE, jnp.int32),
+        owner=jnp.full((n_pages,), FREE, jnp.int32),
+        free_head=jnp.zeros((), jnp.int32),
+        free_list=jnp.arange(n_pages, dtype=jnp.int32),
+    )
+
+
+def n_free(bt: BlockTables) -> jax.Array:
+    return bt.free_list.shape[0] - bt.free_head
+
+
+def alloc_pages(bt: BlockTables, seq_slot, start_page, count, asid
+                ) -> Tuple[BlockTables, jax.Array]:
+    """Allocate `count` physical pages for seq_slot's logical pages
+    [start_page, start_page+count). Returns (bt', ok). Static max `count`
+    callers loop; this is the jit-able single-shot used by the engine."""
+    max_count = bt.leaf.shape[1]
+    idx = jnp.arange(max_count)
+    take = idx < count
+    ok = count <= n_free(bt)
+
+    phys = bt.free_list[(bt.free_head + idx) % bt.free_list.shape[0]]
+    phys = jnp.where(take & ok, phys, FREE)
+    logical = start_page + idx
+    write = take & ok & (logical < max_count)
+    # inactive lanes scatter into a trash slot (never into index 0 — a
+    # stale read-back there would clobber an active lane's write)
+    padded = jnp.concatenate(
+        [bt.leaf[seq_slot], jnp.zeros((1,), jnp.int32)])
+    padded = padded.at[jnp.where(write, logical, max_count)].set(
+        jnp.where(write, phys, 0))
+    leaf = bt.leaf.at[seq_slot].set(padded[:max_count])
+    n_pages = bt.owner.shape[0]
+    owner_p = jnp.concatenate([bt.owner, jnp.zeros((1,), jnp.int32)])
+    owner_p = owner_p.at[jnp.where(phys >= 0, phys, n_pages)].set(
+        jnp.where(phys >= 0, asid, 0))
+    head = bt.free_head + jnp.where(ok, count, 0)
+    return bt._replace(leaf=leaf, owner=owner_p[:n_pages], free_head=head), ok
+
+
+def free_seq(bt: BlockTables, seq_slot) -> BlockTables:
+    """Return a sequence's pages to the pool (lazy free-list append)."""
+    row = bt.leaf[seq_slot]
+    n = (row >= 0).sum()
+    # compact the freed ids to the tail region of the ring
+    order = jnp.argsort(jnp.where(row >= 0, 0, 1))
+    freed = row[order]
+    start = bt.free_head - n
+    pos = (start + jnp.arange(row.shape[0])) % bt.free_list.shape[0]
+    fl = bt.free_list.at[pos].set(
+        jnp.where(jnp.arange(row.shape[0]) < n, freed, bt.free_list[pos]))
+    n_pages = bt.owner.shape[0]
+    owner_p = jnp.concatenate([bt.owner, jnp.zeros((1,), jnp.int32)])
+    owner_p = owner_p.at[jnp.where(row >= 0, row, n_pages)].set(FREE)
+    return bt._replace(
+        leaf=bt.leaf.at[seq_slot].set(FREE),
+        owner=owner_p[:n_pages], free_list=fl, free_head=start)
+
+
+def translate(bt: BlockTables, seq_slot, logical_page, asid):
+    """Logical page -> physical page with protection check.
+
+    Returns (phys, fault) — fault=True on unmapped page or ASID mismatch
+    (cross-address-space access attempt)."""
+    phys = bt.leaf[seq_slot, logical_page]
+    bad = (phys < 0) | (bt.owner[jnp.maximum(phys, 0)] != asid)
+    return jnp.where(bad, 0, phys), bad

@@ -1,0 +1,149 @@
+"""Physical paged KV pool + MASK-style translation caching for serving.
+
+The pool is (n_pages, page_size, KV, dh) per layer-stack slice; tenants
+(ASIDs) own disjoint page sets enforced by `block_table.translate`. A small
+software translation cache (repro.core.tlb — same structure as the
+hardware L2 TLB, ASID-tagged) fronts the two-level table; per-tenant fill
+tokens (repro.core.tokens) throttle which decode streams may install
+entries when tenants thrash it. This is the paper's mechanism transplanted
+into the serving engine (DESIGN.md §2b).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import tlb as tlb_mod
+from repro.core import tokens as tok_mod
+from repro.memmgr import block_table as bt_mod
+
+
+@dataclasses.dataclass(frozen=True)
+class PoolConfig:
+    n_pages: int
+    page_size: int
+    n_kv: int
+    head_dim: int
+    n_layers: int
+    max_seqs: int
+    pages_per_seq: int
+    max_tenants: int = 8
+    seqs_per_tenant: int = 64
+    tcache_entries: int = 256
+    tcache_ways: int = 8
+
+
+class KVPool(NamedTuple):
+    k: jax.Array            # (L, n_pages, page, KV, dh) bf16
+    v: jax.Array
+    tables: bt_mod.BlockTables
+    tcache: tlb_mod.TLBState        # translation cache over (seq,page) keys
+    tokens: tok_mod.TokenState      # per-tenant fill tokens
+    seq_lens: jax.Array             # (max_seqs,) int32
+    seq_asid: jax.Array             # (max_seqs,) int32
+    clock: jax.Array                # () int32 logical time for LRU
+
+
+def init(cfg: PoolConfig) -> KVPool:
+    shape = (cfg.n_layers, cfg.n_pages, cfg.page_size, cfg.n_kv, cfg.head_dim)
+    return KVPool(
+        k=jnp.zeros(shape, jnp.bfloat16),
+        v=jnp.zeros(shape, jnp.bfloat16),
+        tables=bt_mod.init(cfg.n_pages, cfg.max_seqs, cfg.pages_per_seq,
+                           cfg.max_tenants, cfg.seqs_per_tenant),
+        tcache=tlb_mod.init(cfg.tcache_entries, cfg.tcache_ways),
+        tokens=tok_mod.init(cfg.max_tenants,
+                            jnp.full((cfg.max_tenants,), cfg.max_seqs,
+                                     jnp.int32)),
+        seq_lens=jnp.zeros((cfg.max_seqs,), jnp.int32),
+        seq_asid=jnp.full((cfg.max_seqs,), -1, jnp.int32),
+        clock=jnp.zeros((), jnp.int32),
+    )
+
+
+def _tkey(cfg: PoolConfig, seq_slot, logical_page):
+    return seq_slot * cfg.pages_per_seq + logical_page
+
+
+def lookup(cfg: PoolConfig, pool: KVPool, seq_slot, logical_page
+           ) -> Tuple[KVPool, jax.Array, jax.Array, jax.Array]:
+    """Batched translation through the cache. Returns
+    (pool', phys_page, fault, tcache_hit)."""
+    asid = pool.seq_asid[seq_slot]
+    key = _tkey(cfg, seq_slot, logical_page)
+    active = jnp.ones(key.shape, bool)
+    tc, hit = tlb_mod.probe(pool.tcache, key, asid, active, pool.clock)
+    phys, fault = bt_mod.translate(pool.tables, seq_slot, logical_page, asid)
+    tokens = tok_mod.record(pool.tokens, jnp.maximum(asid, 0), hit, active)
+    # fill policy: misses fill only when the tenant holds tokens
+    has_tok = tok_mod.has_token(tokens, jnp.maximum(asid, 0),
+                                seq_slot % cfg.seqs_per_tenant)
+    tc = tlb_mod.fill(tc, key, asid, ~hit & ~fault & has_tok, pool.clock)
+    return pool._replace(tcache=tc, tokens=tokens,
+                         clock=pool.clock + 1), phys, fault, hit
+
+
+def admit_seq(cfg: PoolConfig, pool: KVPool, seq_slot, asid, prompt_len
+              ) -> Tuple[KVPool, jax.Array]:
+    """Admit a sequence: allocate pages for the prompt."""
+    pages = (prompt_len + cfg.page_size - 1) // cfg.page_size
+    tables, ok = bt_mod.alloc_pages(pool.tables, seq_slot, 0, pages, asid)
+    pool = pool._replace(
+        tables=tables,
+        seq_lens=pool.seq_lens.at[seq_slot].set(
+            jnp.where(ok, prompt_len, pool.seq_lens[seq_slot])),
+        seq_asid=pool.seq_asid.at[seq_slot].set(
+            jnp.where(ok, asid, pool.seq_asid[seq_slot])))
+    return pool, ok
+
+
+def append_token_alloc(cfg: PoolConfig, pool: KVPool, seq_slot
+                       ) -> Tuple[KVPool, jax.Array]:
+    """Grow a sequence by one token; allocates a new page on boundary."""
+    ln = pool.seq_lens[seq_slot]
+    need_page = (ln % cfg.page_size) == 0
+    asid = pool.seq_asid[seq_slot]
+    tables, ok = jax.lax.cond(
+        need_page,
+        lambda: bt_mod.alloc_pages(pool.tables, seq_slot,
+                                   ln // cfg.page_size, 1, asid),
+        lambda: (pool.tables, jnp.array(True)))
+    pool = pool._replace(
+        tables=tables,
+        seq_lens=pool.seq_lens.at[seq_slot].set(jnp.where(ok, ln + 1, ln)))
+    return pool, ok
+
+
+def release_seq(cfg: PoolConfig, pool: KVPool, seq_slot) -> KVPool:
+    tables = bt_mod.free_seq(pool.tables, seq_slot)
+    asid = pool.seq_asid[seq_slot]
+    # shootdown: evict this seq's translations (flush by tag range is
+    # approximated by ASID flush when the tenant departs entirely)
+    return pool._replace(
+        tables=tables,
+        seq_lens=pool.seq_lens.at[seq_slot].set(0),
+        seq_asid=pool.seq_asid.at[seq_slot].set(-1))
+
+
+def write_kv(cfg: PoolConfig, pool: KVPool, layer, seq_slots, k_new, v_new
+             ) -> Tuple[KVPool, jax.Array]:
+    """Write one new token's K/V for a batch of sequences at `layer`.
+
+    k_new/v_new: (B, KV, dh). Returns (pool', fault)."""
+    ln = pool.seq_lens[seq_slots] - 1          # position of the new token
+    logical = ln // cfg.page_size
+    offset = ln % cfg.page_size
+    pool, phys, fault, _ = lookup(cfg, pool, seq_slots, logical)
+    k = pool.k.at[layer, phys, offset].set(
+        jnp.where(fault[:, None, None], pool.k[layer, phys, offset], k_new))
+    v = pool.v.at[layer, phys, offset].set(
+        jnp.where(fault[:, None, None], pool.v[layer, phys, offset], v_new))
+    return pool._replace(k=k, v=v), fault
+
+
+def gather_block_table(cfg: PoolConfig, pool: KVPool, seq_slots) -> jax.Array:
+    """(B, pages_per_seq) physical page ids for the paged-attention kernel."""
+    return jnp.maximum(pool.tables.leaf[seq_slots], 0)

@@ -1,0 +1,214 @@
+"""Attention: GQA + RoPE + qk-norm + sliding-window, in three implementations.
+
+* ``naive``        — full O(S^2) softmax; oracle for tests (small shapes only).
+* ``xla_blocked``  — memory-bounded blocked attention (lax.scan over q/k blocks
+                     with online softmax). This is the XLA production path and
+                     the shape-safe path used by the dry-run.
+* ``pallas_flash`` — Pallas TPU kernel (repro.kernels.flash_attention), used on
+                     real TPUs for the hot prefill/train path.
+
+Decode uses a dense-cache path (dry-run/roofline) and a paged path (serving +
+Pallas paged_attention kernel) — see repro/models/lm.py and repro/memmgr.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, head_rmsnorm_params
+from repro.models.params import Param
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Params
+# ---------------------------------------------------------------------------
+
+def attn_params(d_model: int, n_heads: int, n_kv: int, dh: int, qk_norm: bool = False):
+    p = {
+        "wq": Param((d_model, n_heads * dh), ("embed", "heads")),
+        "wk": Param((d_model, n_kv * dh), ("embed", "heads")),
+        "wv": Param((d_model, n_kv * dh), ("embed", "heads")),
+        "wo": Param((n_heads * dh, d_model), ("heads", "embed")),
+    }
+    if qk_norm:
+        p["q_norm"] = head_rmsnorm_params(dh)
+        p["k_norm"] = head_rmsnorm_params(dh)
+    return p
+
+
+def _head_norm(scale, x, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale["scale"]).astype(x.dtype)
+
+
+def project_qkv(params, x, *, n_heads, n_kv, dh, positions, rope_theta,
+                qk_norm=False, use_rope=True):
+    """x: (B, S, d) -> q (B,S,H,dh), k,v (B,S,KV,dh)."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dh->bsh", x, params["wq"]).reshape(B, S, n_heads, dh)
+    k = jnp.einsum("bsd,dh->bsh", x, params["wk"]).reshape(B, S, n_kv, dh)
+    v = jnp.einsum("bsd,dh->bsh", x, params["wv"]).reshape(B, S, n_kv, dh)
+    if qk_norm:
+        q = _head_norm(params["q_norm"], q)
+        k = _head_norm(params["k_norm"], k)
+    if use_rope:
+        q = apply_rope(q, positions, rope_theta)
+        k = apply_rope(k, positions, rope_theta)
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# Naive oracle
+# ---------------------------------------------------------------------------
+
+def naive_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                    q_offset: int = 0):
+    """q: (B,Sq,H,dh); k,v: (B,Sk,KV,dh). GQA by head repetition. fp32 softmax."""
+    B, Sq, H, dh = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, dh)
+    scores = jnp.einsum("bqkgd,bskd->bkgqs", qg, k).astype(jnp.float32)
+    scores *= 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > (qpos[:, None] - window)
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgqs,bskd->bqkgd", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# Blocked (flash-style) attention in pure XLA
+# ---------------------------------------------------------------------------
+
+def _block_attend(q, k, v, mask, m_prev, l_prev, acc_prev, sm_scale):
+    """One (q_block, k_block) tile of online softmax — flat-head layout.
+
+    q: (B,Bq,H,dh)  k,v: (B,Bk,H,dh)  mask: (Bq,Bk) bool
+    state: m,l (B,H,Bq), acc (B,Bq,H,dh) fp32.
+    """
+    s = jnp.einsum("bqhd,bshd->bhqs", q, k).astype(jnp.float32) * sm_scale
+    s = jnp.where(mask[None, None], s, NEG_INF)
+    m_cur = jnp.max(s, axis=-1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new[..., None])
+    correction = jnp.exp(m_prev - m_new)
+    l_new = l_prev * correction + jnp.sum(p, axis=-1)
+    pv = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v).astype(jnp.float32)
+    acc_new = acc_prev * jnp.moveaxis(correction, -1, 1)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def blocked_attention(q, k, v, *, causal=True, window: Optional[int] = None,
+                      block_q=512, block_k=1024):
+    """Memory-bounded attention. GQA k/v are broadcast to H heads up front —
+    a flat-head layout keeps the head dim shardable by GSPMD (splitting it
+    into (KV, G) inside the math kills the mesh-axis mapping and silently
+    replicates scores). Causal path masks all visited tiles (baseline; the
+    'wedge' optimization in §Perf removes the dead upper triangle). SWA
+    restricts visited k-tiles to the window (static trip count)."""
+    B, Sq, H, dh = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    if KV != H:
+        G = H // KV
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    block_q = min(block_q, Sq)
+    block_k = min(block_k, Sk)
+    assert Sq % block_q == 0 and Sk % block_k == 0, (Sq, block_q, Sk, block_k)
+    nq, nk = Sq // block_q, Sk // block_k
+    sm_scale = 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    qg = q.reshape(B, nq, block_q, H, dh)
+
+    if window is not None:
+        nk_vis = min(nk, window // block_k + 2)  # tiles that can intersect window
+    else:
+        nk_vis = nk
+
+    def q_step(_, qi):
+        qb = qg[:, qi]
+        qpos = qi * block_q + jnp.arange(block_q)
+        m0 = jnp.full((B, H, block_q), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, H, block_q), jnp.float32)
+        a0 = jnp.zeros((B, block_q, H, dh), jnp.float32)
+
+        if window is not None:
+            # visit only tiles [k_start, k_start+nk_vis) — static trip count
+            k_start = jnp.maximum(qi - (nk_vis - 1), 0)
+        else:
+            k_start = 0
+
+        def k_step(carry, kj_rel):
+            m, l, acc = carry
+            kj = k_start + kj_rel
+            kb = jax.lax.dynamic_slice_in_dim(k, kj * block_k, block_k, axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, kj * block_k, block_k, axis=1)
+            kpos = kj * block_k + jnp.arange(block_k)
+            mask = jnp.ones((block_q, block_k), bool)
+            if causal:
+                mask &= kpos[None, :] <= qpos[:, None]
+            if window is not None:
+                mask &= kpos[None, :] > (qpos[:, None] - window)
+            m, l, acc = _block_attend(qb, kb, vb, mask, m, l, acc, sm_scale)
+            return (m, l, acc), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), jnp.arange(nk_vis))
+        out = acc / jnp.moveaxis(jnp.maximum(l, 1e-30), -1, 1)[..., None]
+        return None, out.astype(q.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, jnp.arange(nq))
+    # outs: (nq, B, block_q, H, dh) -> (B, Sq, H, dh)
+    return jnp.moveaxis(outs, 0, 1).reshape(B, Sq, H, dh)
+
+
+# ---------------------------------------------------------------------------
+# Decode (single new token against a cache)
+# ---------------------------------------------------------------------------
+
+def decode_attention_dense(q, k_cache, v_cache, cache_len, *,
+                           window: Optional[int] = None):
+    """q: (B,1,H,dh); caches: (B,S,KV,dh); cache_len: (B,) valid lengths.
+
+    Reads the whole cache (memory-roofline-faithful); masked beyond length
+    and outside the sliding window.
+    """
+    B, S, KV, dh = k_cache.shape
+    H = q.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, dh)
+    s = jnp.einsum("bkgd,bskd->bkgs", qg, k_cache).astype(jnp.float32)
+    s *= 1.0 / jnp.sqrt(dh).astype(jnp.float32)
+    kpos = jnp.arange(S)[None, :]
+    valid = kpos < cache_len[:, None]
+    if window is not None:
+        valid &= kpos > (cache_len[:, None] - 1 - window)
+    s = jnp.where(valid[:, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bkgs,bskd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return out.reshape(B, 1, H, dh)
+
+
+def attention(q, k, v, *, impl="xla_blocked", causal=True, window=None,
+              block_q=512, block_k=1024):
+    if impl == "naive":
+        return naive_attention(q, k, v, causal=causal, window=window)
+    if impl == "xla_blocked":
+        return blocked_attention(q, k, v, causal=causal, window=window,
+                                 block_q=block_q, block_k=block_k)
+    if impl == "pallas_flash":
+        from repro.kernels.flash_attention import ops as fa_ops
+        return fa_ops.flash_attention(q, k, v, causal=causal, window=window)
+    raise ValueError(f"unknown attention impl {impl!r}")

@@ -1,0 +1,90 @@
+"""Common pure-JAX layers: RMSNorm, RoPE, SwiGLU MLP, embeddings."""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+
+def rmsnorm_params(d: int):
+    return {"scale": Param((d,), ("embed",), init="ones", dtype=jnp.float32)}
+
+
+def rmsnorm(params, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    return y.astype(x.dtype)
+
+
+def head_rmsnorm_params(dh: int):
+    return {"scale": Param((dh,), (None,), init="ones", dtype=jnp.float32)}
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(dh: int, theta: float) -> jax.Array:
+    """Inverse frequencies, shape (dh//2,), float32."""
+    return 1.0 / (theta ** (jnp.arange(0, dh, 2, dtype=jnp.float32) / dh))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., seq, heads, dh); positions: broadcastable to (..., seq)."""
+    dh = x.shape[-1]
+    inv = rope_freqs(dh, theta)                       # (dh/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., seq, dh/2)
+    sin = jnp.sin(ang)[..., None, :]                  # (..., seq, 1, dh/2)
+    cos = jnp.cos(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# SwiGLU MLP
+# ---------------------------------------------------------------------------
+
+def mlp_params(d: int, d_ff: int):
+    return {
+        "w_gate": Param((d, d_ff), ("embed", "ffn")),
+        "w_up": Param((d, d_ff), ("embed", "ffn")),
+        "w_down": Param((d_ff, d), ("ffn", "embed")),
+    }
+
+
+def mlp(params, x: jax.Array) -> jax.Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+# ---------------------------------------------------------------------------
+# Embedding / LM head
+# ---------------------------------------------------------------------------
+
+def embed_params(vocab: int, d: int):
+    return {"table": Param((vocab, d), ("vocab", "embed"), scale=1.0)}
+
+
+def embed(params, tokens: jax.Array) -> jax.Array:
+    return jnp.take(params["table"], tokens, axis=0)
+
+
+def unembed(params, x: jax.Array) -> jax.Array:
+    """Returns logits (..., vocab) — callers apply vocab-parallel CE without
+    replicating the full logits tensor (sharding constraint applied upstream)."""
+    return jnp.einsum("...d,vd->...v", x, params["table"])
+
+
+def lm_head_params(vocab: int, d: int):
+    return {"table": Param((vocab, d), ("vocab", "embed"))}

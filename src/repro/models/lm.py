@@ -1,0 +1,519 @@
+"""Model assembly: decoder LMs, MoE, SSM, hybrid, and enc-dec backbones.
+
+All architectures compile to one structure: an embedding, a ``lax.scan`` over
+parameter *blocks* (a block = the smallest repeating layer pattern — 1 layer
+for homogeneous models, 8 for jamba's 1:7 mamba:attention interleave), a
+final norm, and a (possibly tied) vocab projection.
+
+Three modes:
+  * ``full``   — train / prefill over (B, S); optionally emits KV caches.
+  * ``decode`` — one token per sequence against mutable caches.
+
+Caches are dicts of stacked arrays with leading (repeats, per_block_count)
+dims so they thread through the same scan as the parameters.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import attention as attn_mod
+from repro.models import layers as L
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models.params import Param
+
+Constrain = Callable[[jax.Array, Tuple[Optional[str], ...]], jax.Array]
+
+
+def _noop_constrain(x, axes):
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Block pattern
+# ---------------------------------------------------------------------------
+
+def _scan_group(R: int) -> int:
+    """Largest divisor of R in [4, 16] closest to sqrt(R); 1 if R < 24."""
+    if R < 24:
+        return 1
+    target = R ** 0.5
+    divs = [g for g in range(4, 17) if R % g == 0]
+    if not divs:
+        return 1
+    return min(divs, key=lambda g: abs(g - target))
+
+
+def block_pattern(cfg: ModelConfig) -> Tuple[int, Tuple[str, ...], Tuple[str, ...]]:
+    """Return (period P, kinds[:P], ffns[:P]) — smallest repeating pattern."""
+    kinds, ffns = cfg.layer_kinds(), cfg.ffn_kinds()
+    n = cfg.n_layers
+    for p in range(1, n + 1):
+        if n % p:
+            continue
+        if all(kinds[i] == kinds[i % p] and ffns[i] == ffns[i % p]
+               for i in range(n)):
+            return p, kinds[:p], ffns[:p]
+    return n, kinds, ffns
+
+
+def _layer_param_tree(cfg: ModelConfig, kind: str, ffn: str) -> Dict[str, Any]:
+    d = cfg.d_model
+    p: Dict[str, Any] = {"norm1": L.rmsnorm_params(d)}
+    if kind == "attn":
+        p["attn"] = attn_mod.attn_params(
+            d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, cfg.qk_norm)
+        if cfg.is_enc_dec:
+            p["cross_norm"] = L.rmsnorm_params(d)
+            p["cross"] = attn_mod.attn_params(
+                d, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, False)
+    else:
+        p["ssm"] = m2.mamba2_params(cfg)
+    if cfg.d_ff > 0 or ffn == "moe":
+        p["norm2"] = L.rmsnorm_params(d)
+        if ffn == "moe":
+            p["moe"] = moe_mod.moe_params(d, cfg.expert_d_ff, cfg.n_experts)
+        else:
+            p["mlp"] = L.mlp_params(d, cfg.d_ff)
+    return p
+
+
+def build_param_specs(cfg: ModelConfig) -> Dict[str, Any]:
+    """Full model Param-spec tree (see repro.models.params)."""
+    P, kinds, ffns = block_pattern(cfg)
+    R = cfg.n_layers // P
+    from repro.models.params import stack_params
+
+    block = {f"layer{j}": _layer_param_tree(cfg, kinds[j], ffns[j])
+             for j in range(P)}
+    blocks = stack_params([block] * R) if R > 1 else block
+
+    specs: Dict[str, Any] = {
+        "embed": L.embed_params(cfg.padded_vocab, cfg.d_model),
+        "final_norm": L.rmsnorm_params(cfg.d_model),
+        "blocks": blocks,
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = L.lm_head_params(cfg.padded_vocab, cfg.d_model)
+    if cfg.n_patches:
+        specs["patch_proj"] = {
+            "w": Param((cfg.d_model, cfg.d_model), ("embed", "embed2"))}
+    if cfg.is_enc_dec:
+        enc_layer = {
+            "norm1": L.rmsnorm_params(cfg.d_model),
+            "attn": attn_mod.attn_params(
+                cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim, False),
+            "norm2": L.rmsnorm_params(cfg.d_model),
+            "mlp": L.mlp_params(cfg.d_model, cfg.d_ff),
+        }
+        specs["encoder"] = {
+            "blocks": stack_params([enc_layer] * cfg.n_enc_layers)
+            if cfg.n_enc_layers > 1 else enc_layer,
+            "norm": L.rmsnorm_params(cfg.d_model),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Cache specs (decode)
+# ---------------------------------------------------------------------------
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int) -> Dict[str, Any]:
+    """ShapeDtypeStruct tree for the decode cache. SWA archs get a ring
+    buffer bounded by the window; SSM layers get O(1) state."""
+    P, kinds, ffns = block_pattern(cfg)
+    R = cfg.n_layers // P
+    n_attn = sum(1 for k in kinds if k == "attn")
+    n_ssm = P - n_attn
+    S = max_len if cfg.sliding_window is None else min(max_len, cfg.sliding_window)
+    out: Dict[str, Any] = {
+        "cache_len": jax.ShapeDtypeStruct((batch,), jnp.int32)}
+    if n_attn:
+        dh, KV = cfg.head_dim, cfg.n_kv_heads
+        kv = jax.ShapeDtypeStruct((R, n_attn, batch, S, KV, dh), jnp.bfloat16)
+        out["k"] = kv
+        out["v"] = kv
+    if n_ssm:
+        st = m2.ssm_state_specs(cfg, batch)
+        out["ssm_h"] = jax.ShapeDtypeStruct((R, n_ssm) + st.h.shape, st.h.dtype)
+        out["ssm_conv"] = jax.ShapeDtypeStruct(
+            (R, n_ssm) + st.conv.shape, st.conv.dtype)
+    if cfg.is_enc_dec and n_attn:
+        ckv = jax.ShapeDtypeStruct(
+            (R, n_attn, batch, cfg.enc_len, KV, dh), jnp.bfloat16)
+        out["cross_k"] = ckv
+        out["cross_v"] = ckv
+    return out
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int):
+    return jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), cache_shapes(cfg, batch, max_len))
+
+
+# ---------------------------------------------------------------------------
+# Layer application
+# ---------------------------------------------------------------------------
+
+def _self_attention_full(cfg, run, lp, x, positions, constrain, build_cache):
+    q, k, v = attn_mod.project_qkv(
+        lp["attn"], x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        dh=cfg.head_dim, positions=positions, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm)
+    q = constrain(q, ("batch", None, "heads", None))
+    k = constrain(k, ("batch", None, "kv_heads", None))
+    o = attn_mod.attention(
+        q, k, v, impl=run.attention_impl, causal=True,
+        window=cfg.sliding_window, block_q=run.attn_block_q,
+        block_k=run.attn_block_k)
+    o = o.reshape(o.shape[0], o.shape[1], cfg.n_heads * cfg.head_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, lp["attn"]["wo"])
+    cache = (k, v) if build_cache else None
+    return constrain(out, ("batch", None, "embed")), cache
+
+
+def _self_attention_decode(cfg, run, lp, x, cache_k, cache_v, cache_len,
+                           constrain):
+    """x: (B,1,d); cache_k/v: (B,S,KV,dh); returns out, updated caches."""
+    B = x.shape[0]
+    positions = cache_len[:, None]  # absolute positions (B,1)
+    q, k, v = attn_mod.project_qkv(
+        lp["attn"], x, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+        dh=cfg.head_dim, positions=positions, rope_theta=cfg.rope_theta,
+        qk_norm=cfg.qk_norm)
+    S = cache_k.shape[1]
+    if cfg.sliding_window is not None and S <= cfg.sliding_window:
+        slot = cache_len % S                       # ring buffer
+    else:
+        slot = jnp.minimum(cache_len, S - 1)
+    bidx = jnp.arange(B)
+    cache_k = cache_k.at[bidx, slot].set(k[:, 0])
+    cache_v = cache_v.at[bidx, slot].set(v[:, 0])
+    cache_k = constrain(cache_k, ("batch", "kvseq", "kv_heads", None))
+    cache_v = constrain(cache_v, ("batch", "kvseq", "kv_heads", None))
+    if cfg.sliding_window is not None and S <= cfg.sliding_window:
+        # ring: everything currently stored is in-window and valid
+        n_valid = jnp.minimum(cache_len + 1, S)
+        o = attn_mod.decode_attention_dense(q, cache_k, cache_v, n_valid)
+    else:
+        o = attn_mod.decode_attention_dense(
+            q, cache_k, cache_v, cache_len + 1, window=cfg.sliding_window)
+    o = o.reshape(B, 1, cfg.n_heads * cfg.head_dim)
+    out = jnp.einsum("bsh,hd->bsd", o, lp["attn"]["wo"])
+    return constrain(out, ("batch", None, "embed")), cache_k, cache_v
+
+
+def _cross_attention(cfg, run, lp, x, enc_out=None, cross_kv=None,
+                     constrain=_noop_constrain):
+    """Cross attention: enc_out given in full mode; cached k/v in decode."""
+    B, S, _ = x.shape
+    dh, KV = cfg.head_dim, cfg.n_kv_heads
+    q = jnp.einsum("bsd,dh->bsh", x, lp["cross"]["wq"]).reshape(
+        B, S, cfg.n_heads, dh)
+    if cross_kv is None:
+        k = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wk"]).reshape(
+            B, -1, KV, dh)
+        v = jnp.einsum("bsd,dh->bsh", enc_out, lp["cross"]["wv"]).reshape(
+            B, -1, KV, dh)
+    else:
+        k, v = cross_kv
+    if S == 1 or S * k.shape[1] <= 1 << 20:
+        o = attn_mod.naive_attention(q, k, v, causal=False)
+    else:
+        # q-blocked only; kv kept whole (enc_len is small and need not divide
+        # a k-block size)
+        bq = S // max(1, S // min(run.attn_block_q, S))
+        while S % bq:
+            bq -= 1
+        o = attn_mod.blocked_attention(q, k, v, causal=False,
+                                       block_q=bq, block_k=k.shape[1])
+    o = o.reshape(B, S, cfg.n_heads * dh)
+    out = jnp.einsum("bsh,hd->bsd", o, lp["cross"]["wo"])
+    return constrain(out, ("batch", None, "embed")), (k, v)
+
+
+def _ffn(cfg, run, lp, x, constrain):
+    aux = None
+    if "moe" in lp:
+        y, aux = moe_mod.moe_apply(
+            lp["moe"], x, top_k=cfg.top_k,
+            capacity_factor=cfg.capacity_factor, constrain=constrain)
+    else:
+        h = x
+        y = L.mlp(lp["mlp"], h)
+    return constrain(y, ("batch", None, "embed")), aux
+
+
+# ---------------------------------------------------------------------------
+# Backbone
+# ---------------------------------------------------------------------------
+
+def backbone(cfg: ModelConfig, run: RunConfig, params, x, positions, *,
+             mode: str = "full", caches=None, enc_out=None,
+             constrain: Constrain = _noop_constrain, build_cache=False):
+    """x: (B,S,d) embedded inputs. Returns (hidden, new_caches, aux_losses)."""
+    P, kinds, ffns = block_pattern(cfg)
+    R = cfg.n_layers // P
+    attn_ix = [j for j in range(P) if kinds[j] == "attn"]
+    ssm_ix = [j for j in range(P) if kinds[j] == "ssm"]
+
+    # per-layer remat inside multi-layer blocks (jamba superblocks): without
+    # it the block VJP holds all P layers' internals (SSD decay matrices,
+    # MoE dispatch buffers) live at once.
+    layer_remat = run.remat and mode == "full" and P > 1
+
+    def apply_block(x, bp, bc):
+        """One block of P layers. bc: this block's cache slices (leading dim =
+        per-block count). Returns (x, new_bc, aux_sum)."""
+        if run.quantize_weights:
+            from repro.models.quant import dequant_tree
+            bp = dequant_tree(bp)   # per-layer: fuses into consumers
+        new_bc = dict(bc) if bc else {}
+        aux_sum = jnp.zeros((), jnp.float32)
+        kv_out = []
+        ssm_out = []
+        cross_out = []
+        for j in range(P):
+            lp = bp[f"layer{j}"]
+            if layer_remat:
+                def layer_fn(x_in, lp_in, _kind=kinds[j]):
+                    h_in = L.rmsnorm(lp_in["norm1"], x_in, cfg.norm_eps)
+                    if _kind == "attn":
+                        o_in, _ = _self_attention_full(
+                            cfg, run, lp_in, h_in, positions, constrain, False)
+                    else:
+                        o_in, _ = m2.mamba2_forward(lp_in["ssm"], cfg, h_in,
+                                                    constrain=constrain)
+                        o_in = constrain(o_in, ("batch", None, "embed"))
+                    x_in = x_in + o_in
+                    a_in = jnp.zeros((), jnp.float32)
+                    if "norm2" in lp_in:
+                        h2_in = L.rmsnorm(lp_in["norm2"], x_in, cfg.norm_eps)
+                        y_in, aux_in = _ffn(cfg, run, lp_in, h2_in, constrain)
+                        x_in = x_in + y_in
+                        if aux_in is not None:
+                            a_in = aux_in["lb_loss"] + 1e-3 * aux_in["z_loss"]
+                    return x_in, a_in
+
+                x, a_j = jax.checkpoint(layer_fn)(x, lp)
+                aux_sum = aux_sum + a_j
+                continue
+            h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+            if kinds[j] == "attn":
+                a = attn_ix.index(j)
+                if mode == "decode":
+                    o, ck, cv = _self_attention_decode(
+                        cfg, run, lp, h, bc["k"][a], bc["v"][a],
+                        bc["cache_len"], constrain)
+                    kv_out.append((ck, cv))
+                else:
+                    o, kv = _self_attention_full(
+                        cfg, run, lp, h, positions, constrain, build_cache)
+                    if build_cache:
+                        kv_out.append(kv)
+                x = x + o
+                if cfg.is_enc_dec:
+                    h2 = L.rmsnorm(lp["cross_norm"], x, cfg.norm_eps)
+                    ckv = None
+                    if mode == "decode":
+                        ckv = (bc["cross_k"][a], bc["cross_v"][a])
+                    o2, ckv_new = _cross_attention(
+                        cfg, run, lp, h2, enc_out=enc_out, cross_kv=ckv,
+                        constrain=constrain)
+                    x = x + o2
+                    if build_cache:
+                        cross_out.append(ckv_new)
+            else:
+                m = ssm_ix.index(j)
+                if mode == "decode":
+                    st = m2.SSMState(h=bc["ssm_h"][m], conv=bc["ssm_conv"][m])
+                    o, st = m2.mamba2_decode(lp["ssm"], cfg, h, st)
+                    ssm_out.append(st)
+                else:
+                    st0 = None
+                    o, st = m2.mamba2_forward(lp["ssm"], cfg, h, st0,
+                                              constrain=constrain)
+                    if build_cache:
+                        ssm_out.append(st)
+                x = x + constrain(o, ("batch", None, "embed"))
+            if "norm2" in lp:
+                h = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+                y, aux = _ffn(cfg, run, lp, h, constrain)
+                x = x + y
+                if aux is not None:
+                    aux_sum = aux_sum + aux["lb_loss"] + 1e-3 * aux["z_loss"]
+        if kv_out:
+            new_bc["k"] = jnp.stack([k for k, _ in kv_out])
+            new_bc["v"] = jnp.stack([v for _, v in kv_out])
+        if ssm_out:
+            new_bc["ssm_h"] = jnp.stack([s.h for s in ssm_out])
+            new_bc["ssm_conv"] = jnp.stack([s.conv for s in ssm_out])
+        if cross_out:
+            new_bc["cross_k"] = jnp.stack([k for k, _ in cross_out])
+            new_bc["cross_v"] = jnp.stack([v for _, v in cross_out])
+        return x, new_bc, aux_sum
+
+    # --- cache xs for the scan (strip cache_len: it's shared, not stacked) ---
+    cache_len = caches["cache_len"] if caches else None
+    scan_caches = {k: v for k, v in (caches or {}).items() if k != "cache_len"}
+
+    if R == 1:
+        bc = {k: v[0] for k, v in scan_caches.items()}
+        if cache_len is not None:
+            bc["cache_len"] = cache_len
+        x, new_bc, aux = apply_block(x, params["blocks"], bc)
+        new_caches = {k: v[None] for k, v in new_bc.items() if k != "cache_len"}
+    else:
+        def body(carry, xs):
+            x, aux = carry
+            bp, bc = xs
+            if cache_len is not None:
+                bc = dict(bc, cache_len=cache_len)
+            x, new_bc, aux_b = apply_block(x, bp, bc)
+            new_bc.pop("cache_len", None)
+            return (x, aux + aux_b), new_bc
+
+        remat_scan = run.remat and mode == "full"
+        # nested sqrt(R) checkpointing for deep stacks: only R/G block
+        # boundaries are saved; one group of G blocks is rematerialized at a
+        # time during the backward pass.
+        group = _scan_group(R) if (remat_scan and not scan_caches) else 1
+        if group > 1:
+            grouped = jax.tree_util.tree_map(
+                lambda a: a.reshape((R // group, group) + a.shape[1:]),
+                params["blocks"])
+
+            def outer(carry, bp_group):
+                return jax.lax.scan(jax.checkpoint(body), carry,
+                                    (bp_group, {}))
+
+            (x, aux), new_caches = jax.lax.scan(
+                jax.checkpoint(outer), (x, jnp.zeros((), jnp.float32)),
+                grouped)
+        else:
+            body_fn = jax.checkpoint(body) if remat_scan else body
+            (x, aux), new_caches = jax.lax.scan(
+                body_fn, (x, jnp.zeros((), jnp.float32)),
+                (params["blocks"], scan_caches))
+
+    if mode == "decode":
+        new_caches["cache_len"] = cache_len + 1
+    elif build_cache:
+        new_caches["cache_len"] = jnp.full((x.shape[0],), x.shape[1], jnp.int32)
+    else:
+        new_caches = None
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# Encoder (whisper)
+# ---------------------------------------------------------------------------
+
+def encode(cfg: ModelConfig, run: RunConfig, params, frames,
+           constrain: Constrain = _noop_constrain):
+    """frames: (B, enc_len, d) precomputed frame embeddings (stub frontend)."""
+    enc = params["encoder"]
+    positions = jnp.arange(frames.shape[1])[None, :]
+
+    def enc_layer(x, lp):
+        h = L.rmsnorm(lp["norm1"], x, cfg.norm_eps)
+        q, k, v = attn_mod.project_qkv(
+            lp["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            dh=cfg.head_dim, positions=positions, rope_theta=cfg.rope_theta)
+        o = attn_mod.attention(q, k, v, impl="naive" if frames.shape[1] <= 2048
+                               else run.attention_impl, causal=False)
+        o = o.reshape(*o.shape[:2], -1)
+        x = x + jnp.einsum("bsh,hd->bsd", o, lp["attn"]["wo"])
+        h = L.rmsnorm(lp["norm2"], x, cfg.norm_eps)
+        return x + L.mlp(lp["mlp"], h), None
+
+    if cfg.n_enc_layers > 1:
+        x, _ = jax.lax.scan(lambda c, lp: enc_layer(c, lp),
+                            frames, enc["blocks"])
+    else:
+        x, _ = enc_layer(frames, enc["blocks"])
+    return L.rmsnorm(enc["norm"], x, cfg.norm_eps)
+
+
+# ---------------------------------------------------------------------------
+# Top-level entries
+# ---------------------------------------------------------------------------
+
+def embed_inputs(cfg, params, batch, constrain: Constrain = _noop_constrain):
+    """Assemble (B,S,d) input embeddings from the batch dict."""
+    x = L.embed(params["embed"], batch["tokens"])
+    if cfg.n_patches and "patch_embeds" in batch:
+        pe = jnp.einsum("bpd,de->bpe", batch["patch_embeds"],
+                        params["patch_proj"]["w"])
+        x = jnp.concatenate([pe.astype(x.dtype), x], axis=1)
+    return constrain(x, ("batch", None, "embed"))
+
+
+def logits_fn(cfg, params, hidden, constrain: Constrain = _noop_constrain):
+    table = params["embed"]["table"] if cfg.tie_embeddings \
+        else params["lm_head"]["table"]
+    logits = jnp.einsum("bsd,vd->bsv", hidden, table)
+    return constrain(logits, ("batch", None, "vocab"))
+
+
+def forward_train(cfg, run, params, batch, constrain=_noop_constrain):
+    """Returns (logits, aux_loss)."""
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode(cfg, run, params, batch["frames"], constrain)
+    x = embed_inputs(cfg, params, batch, constrain)
+    positions = jnp.arange(x.shape[1])[None, :]
+    h, _, aux = backbone(cfg, run, params, x, positions, mode="full",
+                         enc_out=enc_out, constrain=constrain)
+    return logits_fn(cfg, params, h, constrain), aux
+
+
+def forward_prefill(cfg, run, params, batch, max_len,
+                    constrain=_noop_constrain):
+    """Returns (last-token logits, caches ready for decode)."""
+    enc_out = None
+    if cfg.is_enc_dec:
+        enc_out = encode(cfg, run, params, batch["frames"], constrain)
+    x = embed_inputs(cfg, params, batch, constrain)
+    positions = jnp.arange(x.shape[1])[None, :]
+    h, caches, aux = backbone(cfg, run, params, x, positions, mode="full",
+                              enc_out=enc_out, constrain=constrain,
+                              build_cache=True)
+    logits = logits_fn(cfg, params, h[:, -1:], constrain)
+    caches = _pad_prefill_caches(cfg, caches, max_len)
+    return logits, caches
+
+
+def _pad_prefill_caches(cfg, caches, max_len):
+    """Grow prefill KV to the decode cache capacity (right-padded)."""
+    out = dict(caches)
+    for key in ("k", "v"):
+        if key in caches:
+            arr = caches[key]  # (R, A, B, S, KV, dh)
+            S = arr.shape[3]
+            cap = max_len if cfg.sliding_window is None \
+                else min(max_len, cfg.sliding_window)
+            if cap > S:
+                pad = [(0, 0)] * arr.ndim
+                pad[3] = (0, cap - S)
+                out[key] = jnp.pad(arr, pad)
+            elif cap < S:
+                out[key] = arr[:, :, :, S - cap:]
+    return out
+
+
+def forward_decode(cfg, run, params, token_batch, caches, enc_out=None,
+                   constrain=_noop_constrain):
+    """token_batch: {'tokens': (B,1)}; returns (logits (B,1,V), new caches)."""
+    x = embed_inputs(cfg, params, token_batch, constrain)
+    h, new_caches, _ = backbone(cfg, run, params, x, None, mode="decode",
+                                caches=caches, enc_out=enc_out,
+                                constrain=constrain)
+    return logits_fn(cfg, params, h, constrain), new_caches

@@ -1,0 +1,31 @@
+"""Vocab-parallel cross-entropy. Never replicates the full [B,S,V] logits:
+the vocab axis stays sharded on the `model` mesh axis and XLA inserts the
+reductions (max / sum-exp / label gather) as collectives."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array, mask=None,
+                  real_vocab=None):
+    """logits: (B, S, V_padded); labels: (B, S) int32; mask: (B, S) optional.
+
+    ``real_vocab``: logical vocab size — padded tail columns are masked out
+    (embedding tables are padded to a 128 multiple for even sharding).
+    Returns (mean_loss, metrics). fp32 math regardless of logits dtype.
+    """
+    lf = logits.astype(jnp.float32)
+    if real_vocab is not None and real_vocab < logits.shape[-1]:
+        vmask = jnp.arange(logits.shape[-1]) < real_vocab
+        lf = jnp.where(vmask, lf, -1e30)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is None:
+        mask = jnp.ones_like(nll)
+    mask = mask.astype(jnp.float32)
+    denom = jnp.maximum(jnp.sum(mask), 1.0)
+    loss = jnp.sum(nll * mask) / denom
+    acc = jnp.sum((jnp.argmax(lf, axis=-1) == labels) * mask) / denom
+    return loss, {"loss": loss, "accuracy": acc, "tokens": denom}

@@ -1,0 +1,205 @@
+"""Mamba2 (SSD — state-space duality) block, chunked scan + O(1) decode.
+
+Training/prefill uses the chunked SSD algorithm [arXiv:2405.21060]:
+intra-chunk quadratic part + inter-chunk state recurrence (lax.scan over
+chunks). Decode is the O(1) recurrent update. The Pallas kernel
+(repro.kernels.ssd_scan) implements the intra-chunk part for TPU; this
+module is the XLA path and the oracle.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param
+
+
+class SSMState(NamedTuple):
+    h: jax.Array      # (B, nh, hd, d_state) fp32
+    conv: jax.Array   # (B, conv_w - 1, conv_dim)
+
+
+def mamba2_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    conv_dim = d_in + 2 * cfg.ssm_state
+    return d_in, nh, conv_dim
+
+
+def mamba2_params(cfg):
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    d = cfg.d_model
+    return {
+        "in_proj": Param((d, 2 * d_in + 2 * cfg.ssm_state + nh), ("embed", "ssm")),
+        "conv_w": Param((cfg.ssm_conv_width, conv_dim), (None, "ssm")),
+        "conv_b": Param((conv_dim,), ("ssm",), init="zeros"),
+        "A_log": Param((nh,), (None,), dtype=jnp.float32, init="constant", const=0.0),
+        "dt_bias": Param((nh,), (None,), dtype=jnp.float32, init="zeros"),
+        "D": Param((nh,), (None,), dtype=jnp.float32, init="ones"),
+        "norm_scale": Param((d_in,), ("ssm",), dtype=jnp.float32, init="ones"),
+        "out_proj": Param((d_in, d), ("ssm", "embed")),
+    }
+
+
+def _split_proj(cfg, proj):
+    d_in, nh, _ = mamba2_dims(cfg)
+    zs = d_in
+    xs = d_in
+    bs = cfg.ssm_state
+    cs = cfg.ssm_state
+    z, xbc, dt = jnp.split(proj, [zs, zs + xs + bs + cs], axis=-1)
+    return z, xbc, dt  # dt: (..., nh)
+
+
+def _causal_conv(xbc, conv_w, conv_b, prev=None):
+    """Depthwise causal conv, width W. xbc: (B,S,C); prev: (B,W-1,C) or None."""
+    W = conv_w.shape[0]
+    if prev is None:
+        prev = jnp.zeros((xbc.shape[0], W - 1, xbc.shape[2]), xbc.dtype)
+    xp = jnp.concatenate([prev, xbc], axis=1)
+    out = jnp.zeros_like(xbc, dtype=jnp.float32)
+    for i in range(W):
+        out = out + xp[:, i : i + xbc.shape[1]].astype(jnp.float32) * conv_w[i]
+    out = out + conv_b
+    new_prev = xp[:, xp.shape[1] - (W - 1):]
+    return jax.nn.silu(out).astype(xbc.dtype), new_prev
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-triangular inclusive-exclusive segment
+    sums: out[..., i, j] = sum_{k=j+1..i} x[..., k]  (NEG_INF above diagonal)."""
+    Q = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]
+    ii = jnp.arange(Q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, chunk: int, h0=None, constrain=None):
+    """Chunked SSD scan.
+
+    x: (b, S, nh, hd)   dt: (b, S, nh)   A: (nh,) negative
+    B, C: (b, S, ds)    returns y: (b, S, nh, hd), h_final (b, nh, hd, ds)
+    """
+    cb = constrain if constrain is not None else (lambda a, ax: a)
+    b, S, nh, hd = x.shape
+    ds = B.shape[-1]
+    chunk = min(chunk, S)
+    while S % chunk:          # static shapes: pick the largest divisor
+        chunk -= 1
+    nc = S // chunk
+    xf = (x * dt[..., None]).astype(jnp.float32)       # discretized input
+    dA = (dt * A[None, None, :]).astype(jnp.float32)    # (b,S,nh), negative
+
+    # reshape into chunks (heads sharded over model: the big (Q,Q) decay
+    # matrices must never replicate across the model axis)
+    xc = cb(xf.reshape(b, nc, chunk, nh, hd),
+            ("batch", None, None, "heads", None))
+    dAc = cb(dA.reshape(b, nc, chunk, nh), ("batch", None, None, "heads"))
+    Bc = B.reshape(b, nc, chunk, ds).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, ds).astype(jnp.float32)
+
+    # ---- intra-chunk (quadratic within chunk) ----
+    L = cb(jnp.exp(_segsum(jnp.moveaxis(dAc, -1, -2))),
+           ("batch", None, "heads", None, None))           # (b,nc,nh,Q,Q)
+    G = jnp.einsum("bnqd,bnsd->bnqs", Cc, Bc)             # (b,nc,Q,Q)
+    M = G[:, :, None] * L                                  # (b,nc,nh,Q,Q)
+    y_intra = cb(jnp.einsum("bnhqs,bnshd->bnqhd", M, xc),
+                 ("batch", None, None, "heads", None))
+
+    # ---- chunk states ----
+    dA_cum = jnp.cumsum(dAc, axis=2)                       # (b,nc,Q,nh)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (b,nc,Q,nh)
+    S_chunk = jnp.einsum("bnsd,bnsh,bnshp->bnhpd", Bc, decay_to_end, xc)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])             # (b,nc,nh)
+
+    # ---- inter-chunk recurrence (scan over chunks) ----
+    if h0 is None:
+        h0 = jnp.zeros((b, nh, hd, ds), jnp.float32)
+
+    def step(h, inp):
+        s_c, decay_c = inp                                  # (b,nh,hd,ds), (b,nh)
+        h_out = h                                            # state entering chunk
+        h_new = h * decay_c[..., None, None] + s_c
+        return h_new, h_out
+
+    sc_t = jnp.moveaxis(S_chunk, 1, 0)                      # (nc,b,nh,hd,ds)
+    dc_t = jnp.moveaxis(chunk_decay, 1, 0)                  # (nc,b,nh)
+    h_final, h_enter = jax.lax.scan(step, h0, (sc_t, dc_t))
+    h_enter = jnp.moveaxis(h_enter, 0, 1)                   # (b,nc,nh,hd,ds)
+
+    # ---- inter-chunk contribution ----
+    decay_from_start = jnp.exp(dA_cum)                      # (b,nc,Q,nh)
+    y_inter = jnp.einsum("bnqd,bnqh,bnhpd->bnqhp",
+                         Cc, decay_from_start, h_enter)
+
+    y = (y_intra + y_inter).reshape(b, S, nh, hd)
+    return y, h_final
+
+
+def mamba2_forward(params, cfg, x, state: SSMState = None, constrain=None):
+    """Full block (prefill/train). x: (B,S,d). Returns (y, new_state)."""
+    cb = constrain if constrain is not None else (lambda a, ax: a)
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    proj = cb(jnp.einsum("bsd,dp->bsp", x, params["in_proj"]),
+              ("batch", None, "ssm"))
+    z, xbc, dt = _split_proj(cfg, proj)
+    prev = state.conv if state is not None else None
+    xbc, conv_state = _causal_conv(xbc, params["conv_w"], params["conv_b"], prev)
+    xs, B, C = jnp.split(xbc, [d_in, d_in + cfg.ssm_state], axis=-1)
+    xs = xs.reshape(*xs.shape[:2], nh, cfg.ssm_head_dim)
+    dtp = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    h0 = state.h if state is not None else None
+    y, h = ssd_chunked(xs, dtp, A, B, C, cfg.ssm_chunk, h0,
+                       constrain=constrain)
+    y = y + params["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(*y.shape[:2], d_in)
+    # gated RMSNorm (mamba2 norm-before-out_proj)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"]
+    out = jnp.einsum("bsp,pd->bsd", y.astype(x.dtype), params["out_proj"])
+    return out, SSMState(h=h, conv=conv_state)
+
+
+def mamba2_decode(params, cfg, x, state: SSMState):
+    """O(1) single-token update. x: (B,1,d)."""
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    proj = jnp.einsum("bsd,dp->bsp", x, params["in_proj"])
+    z, xbc, dt = _split_proj(cfg, proj)
+    # conv ring update
+    xp = jnp.concatenate([state.conv, xbc], axis=1)         # (B, W, C)
+    out = jnp.einsum("bwc,wc->bc", xp.astype(jnp.float32), params["conv_w"])
+    out = jax.nn.silu(out + params["conv_b"])[:, None, :].astype(x.dtype)
+    conv_state = xp[:, 1:]
+    xs, B, C = jnp.split(out, [d_in, d_in + cfg.ssm_state], axis=-1)
+    xs = xs.reshape(xs.shape[0], nh, cfg.ssm_head_dim)       # (B,nh,hd)
+    dtp = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + params["dt_bias"])  # (B,nh)
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dtp * A[None, :])                        # (B,nh)
+    Bv = B[:, 0].astype(jnp.float32)                         # (B,ds)
+    Cv = C[:, 0].astype(jnp.float32)
+    xin = (xs.astype(jnp.float32) * dtp[..., None])          # (B,nh,hd)
+    h = state.h * decay[..., None, None] + jnp.einsum("bhp,bd->bhpd", xin, Bv)
+    y = jnp.einsum("bhpd,bd->bhp", h, Cv)
+    y = y + params["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(y.shape[0], 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(jnp.square(y), axis=-1, keepdims=True)
+    y = y * jax.lax.rsqrt(var + 1e-5) * params["norm_scale"]
+    out = jnp.einsum("bsp,pd->bsd", y.astype(x.dtype), params["out_proj"])
+    return out, SSMState(h=h, conv=conv_state)
+
+
+def ssm_state_specs(cfg, batch: int):
+    d_in, nh, conv_dim = mamba2_dims(cfg)
+    return SSMState(
+        h=jax.ShapeDtypeStruct((batch, nh, cfg.ssm_head_dim, cfg.ssm_state),
+                               jnp.float32),
+        conv=jax.ShapeDtypeStruct((batch, cfg.ssm_conv_width - 1, conv_dim),
+                                  jnp.bfloat16),
+    )

@@ -1,0 +1,68 @@
+"""Public model API: build/init params, forward entry points, input specs."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.models import lm
+from repro.models.params import abstractify, materialize
+
+
+def param_specs(cfg: ModelConfig):
+    return lm.build_param_specs(cfg)
+
+
+def init_params(rng: jax.Array, cfg: ModelConfig):
+    return materialize(rng, lm.build_param_specs(cfg))
+
+
+def abstract_params(cfg: ModelConfig, sharding_fn=None, quantize=False):
+    specs = lm.build_param_specs(cfg)
+    if quantize:
+        from repro.models.quant import quantize_spec_tree
+        specs = dict(specs, blocks=quantize_spec_tree(specs["blocks"]))
+    return abstractify(specs, sharding_fn)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig,
+                sharding_fn=None) -> Dict[str, Any]:
+    """ShapeDtypeStruct stand-ins for every model input of this cell.
+
+    train:   {tokens, labels [, frames | patch_embeds]}
+    prefill: {tokens [, frames | patch_embeds]}
+    decode:  {tokens (B,1), caches…} — caches are supplied separately via
+             lm.cache_shapes.
+    """
+    B, S = shape.global_batch, shape.seq_len
+
+    def mk(s, dt=jnp.int32, axes=("batch", None)):
+        if sharding_fn is None:
+            return jax.ShapeDtypeStruct(s, dt)
+        return jax.ShapeDtypeStruct(s, dt, sharding=sharding_fn(axes, s))
+
+    specs: Dict[str, Any] = {}
+    if shape.kind in ("train", "prefill"):
+        s_text = S - (cfg.n_patches or 0)
+        specs["tokens"] = mk((B, s_text))
+        if shape.kind == "train":
+            specs["labels"] = mk((B, S))
+        if cfg.n_patches:
+            specs["patch_embeds"] = mk((B, cfg.n_patches, cfg.d_model),
+                                       jnp.bfloat16, ("batch", None, None))
+        if cfg.is_enc_dec:
+            specs["frames"] = mk((B, cfg.enc_len, cfg.d_model), jnp.bfloat16,
+                                 ("batch", None, None))
+    else:  # decode
+        specs["tokens"] = mk((B, 1))
+    return specs
+
+
+# re-exports for convenience
+forward_train = lm.forward_train
+forward_prefill = lm.forward_prefill
+forward_decode = lm.forward_decode
+cache_shapes = lm.cache_shapes
+init_cache = lm.init_cache

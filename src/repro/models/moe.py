@@ -1,0 +1,126 @@
+"""Mixture-of-Experts FFN with group-local, sort-based capacity dispatch.
+
+GShard-style groups: each *sequence* routes its own tokens independently
+(group = sequence), so every dispatch intermediate carries the batch dim and
+stays sharded over the data axis. Expert buffers are laid out
+(batch -> data, experts -> model, capacity, d); the scatter into them is the
+token all-to-all. Compiled FLOPs are proportional to *active* experts:
+per-group capacity C = ceil(S*top_k/E * capacity_factor).
+
+Expert weights shard experts->model (EP); under FSDP the ffn dim additionally
+shards over data (2D: consumed in place, w_down psums over data) — see
+repro.distributed.sharding.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param
+
+
+def moe_params(d: int, d_ff: int, n_experts: int):
+    return {
+        "router": Param((d, n_experts), ("embed", "experts"), dtype=jnp.float32),
+        "w_gate": Param((n_experts, d, d_ff), ("experts", "embed", "ffn")),
+        "w_up": Param((n_experts, d, d_ff), ("experts", "embed", "ffn")),
+        "w_down": Param((n_experts, d_ff, d), ("experts", "ffn", "embed")),
+    }
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def moe_apply(params, x: jax.Array, *, top_k: int, capacity_factor: float = 1.25,
+              constrain=None):
+    """x: (B, S, d) -> (B, S, d), aux dict. Routing is per sequence (group).
+
+    Decode (S == 1): the whole batch routes as ONE group — per-sequence
+    groups would round capacity up to 8 slots per (expert, sequence) and
+    waste ~E/top_k x expert compute (§Perf hillclimb A1)."""
+    B, S, d = x.shape
+    if S == 1 and B > 1:
+        out, aux = moe_apply(params, x.reshape(1, B, d), top_k=top_k,
+                             capacity_factor=capacity_factor,
+                             constrain=constrain)
+        return out.reshape(B, S, d), aux
+    E = params["router"].shape[-1]
+    cap = _round_up(int(max(1, round(S * top_k / E * capacity_factor))), 8)
+    cap = min(cap, S * top_k)
+
+    logits = jnp.einsum("bsd,de->bse", x.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)                    # (B, S, E)
+    gate_vals, gate_idx = jax.lax.top_k(probs, top_k)          # (B, S, K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9)
+
+    # ---- aux losses (Switch formulation, averaged over groups) ----
+    me = jnp.mean(probs, axis=1)                               # (B, E)
+    ce = jnp.mean(jnp.sum(jax.nn.one_hot(gate_idx, E, dtype=jnp.float32),
+                          axis=2), axis=1)                     # (B, E)
+    lb_loss = E * jnp.mean(jnp.sum(me * ce, axis=-1))
+    z_loss = jnp.mean(jnp.square(jax.nn.logsumexp(logits, axis=-1)))
+
+    # ---- per-group slot assignment (vectorized over B) ----
+    SK = S * top_k
+    eids = gate_idx.reshape(B, SK)                             # (B, SK)
+    tok_of = jnp.broadcast_to(
+        jnp.repeat(jnp.arange(S), top_k)[None], (B, SK))       # (B, SK)
+    w_of = gate_vals.reshape(B, SK)
+
+    order = jnp.argsort(eids, axis=1, stable=True)             # (B, SK)
+    sorted_eids = jnp.take_along_axis(eids, order, axis=1)
+    counts = jax.vmap(lambda e: jnp.bincount(e, length=E))(eids)  # (B, E)
+    starts = jnp.concatenate(
+        [jnp.zeros((B, 1), counts.dtype), jnp.cumsum(counts, axis=1)[:, :-1]],
+        axis=1)                                                # (B, E)
+    pos_sorted = jnp.arange(SK)[None, :] - jnp.take_along_axis(
+        starts, sorted_eids, axis=1)
+    pos = jnp.zeros((B, SK), jnp.int32)
+    pos = jax.vmap(lambda p, o, v: p.at[o].set(v))(
+        pos, order, pos_sorted.astype(jnp.int32))
+    valid = pos < cap
+    slot = jnp.where(valid, eids * cap + pos, E * cap)         # (B, SK)
+
+    # ---- slot tables: slot -> (token, weight); tiny int/scalar arrays ----
+    # Dispatch and combine are formulated as gathers/scatters against the
+    # EXPERT-LOCAL buffer so no full-(E*cap, d) tensor is ever materialized
+    # replicated across the model axis (neither in fwd nor as a bwd
+    # cotangent) — the expert-dim contraction becomes a psum.
+    cb = constrain if constrain is not None else (lambda a, ax: a)
+    n_slots = E * cap + 1                                      # last = trash
+    tok_tbl = jnp.full((B, n_slots), S, jnp.int32)             # S = pad row
+    tok_tbl = jax.vmap(lambda tt, ss, vv: tt.at[ss].set(vv))(
+        tok_tbl, slot, tok_of.astype(jnp.int32))
+    w_tbl = jnp.zeros((B, n_slots), jnp.float32)
+    w_tbl = jax.vmap(lambda wt, ss, vv: wt.at[ss].set(vv))(
+        w_tbl, slot, jnp.where(valid, w_of, 0.0))
+    tok_tbl = tok_tbl[:, : E * cap]
+    w_tbl = w_tbl[:, : E * cap]
+
+    xp = jnp.concatenate([x, jnp.zeros((B, 1, d), x.dtype)], axis=1)
+    ebuf = jnp.take_along_axis(xp, tok_tbl[..., None], axis=1)
+    ebuf = cb(ebuf.reshape(B, E, cap, d), ("batch", "experts", None, None))
+
+    # ---- expert FFN (SwiGLU), batched over (group, expert) ----
+    # gate activation stays in bf16: an f32 upcast here makes every backward
+    # cotangent (and its cross-shard all-reduce) f32 — 2x HBM and 2x ICI
+    g = jnp.einsum("becd,edf->becf", ebuf, params["w_gate"])
+    u = jnp.einsum("becd,edf->becf", ebuf, params["w_up"])
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("becf,efd->becd", h, params["w_down"])
+    if constrain is not None:
+        y = constrain(y, ("batch", "experts", None, None))
+
+    # ---- combine: weighted scatter back to token positions ----
+    contrib = y.reshape(B, E * cap, d) * w_tbl[..., None].astype(y.dtype)
+    out = jnp.zeros((B, S + 1, d), y.dtype)
+    out = jax.vmap(lambda oo, tt, cc: oo.at[tt].add(cc))(out, tok_tbl, contrib)
+    out = cb(out[:, :S], ("batch", None, None))
+
+    dropped = jnp.sum(~valid) / (B * SK)
+    aux = {"lb_loss": lb_loss, "z_loss": z_loss, "dropped_frac": dropped}
+    return out, aux

@@ -1,0 +1,112 @@
+"""Parameter-spec system.
+
+Models are described as pytrees of :class:`Param` leaves. Each leaf carries
+its shape, dtype, init recipe, and *logical* axis names. The same tree is:
+
+* materialized into real arrays for CPU smoke tests / small training runs, or
+* turned into ``jax.ShapeDtypeStruct`` stand-ins (with ``NamedSharding``
+  attached) for the multi-pod dry-run — no device allocation.
+
+Logical axes are mapped to mesh axes by :mod:`repro.distributed.sharding`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class Param:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]  # logical axis names (len == rank)
+    dtype: Any = jnp.bfloat16
+    init: str = "normal"             # normal | zeros | ones | constant
+    scale: Optional[float] = None    # None -> 1/sqrt(fan_in)
+    const: float = 0.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def is_param(x) -> bool:
+    return isinstance(x, Param)
+
+
+def tree_map_params(fn: Callable[[Param], Any], tree):
+    return jax.tree_util.tree_map(fn, tree, is_leaf=is_param)
+
+
+def _fan_in(p: Param) -> int:
+    # convention: last axis is the output dim for 2D+ weights
+    if len(p.shape) <= 1:
+        return max(int(np.prod(p.shape)), 1)
+    return int(np.prod(p.shape[:-1]))
+
+
+def materialize(rng: jax.Array, tree, dtype_override=None):
+    """Instantiate real arrays (used by smoke tests and small runs)."""
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_param)
+    keys = jax.random.split(rng, len(leaves))
+    out = []
+    for key, p in zip(keys, leaves):
+        dt = dtype_override or p.dtype
+        if p.init == "zeros":
+            arr = jnp.zeros(p.shape, dt)
+        elif p.init == "ones":
+            arr = jnp.ones(p.shape, dt)
+        elif p.init == "constant":
+            arr = jnp.full(p.shape, p.const, dt)
+        else:
+            scale = p.scale if p.scale is not None else 1.0 / np.sqrt(_fan_in(p))
+            arr = (jax.random.normal(key, p.shape, jnp.float32) * scale).astype(dt)
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def abstractify(tree, sharding_fn: Optional[Callable[[Param], Any]] = None):
+    """ShapeDtypeStruct tree (optionally with NamedSharding) — zero allocation."""
+
+    def _mk(p: Param):
+        if sharding_fn is None:
+            return jax.ShapeDtypeStruct(p.shape, p.dtype)
+        return jax.ShapeDtypeStruct(p.shape, p.dtype, sharding=sharding_fn(p))
+
+    return tree_map_params(_mk, tree)
+
+
+def stack_params(trees):
+    """Stack a list of identically-structured Param trees along a new leading
+    'layers' axis (for lax.scan over layers)."""
+
+    def _stack(*ps: Param) -> Param:
+        p0 = ps[0]
+        assert all(p.shape == p0.shape for p in ps)
+        return dataclasses.replace(
+            p0, shape=(len(ps),) + p0.shape, axes=("layers",) + p0.axes
+        )
+
+    return jax.tree_util.tree_map(_stack, *trees, is_leaf=is_param)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_param)
+    total = 0
+    for leaf in leaves:
+        if is_param(leaf):
+            total += int(np.prod(leaf.shape))
+        else:
+            total += int(np.prod(jnp.shape(leaf)))
+    return total
+
+
+def param_bytes(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_param)
+    total = 0
+    for leaf in leaves:
+        itemsize = jnp.dtype(leaf.dtype).itemsize
+        total += int(np.prod(leaf.shape)) * itemsize
+    return total

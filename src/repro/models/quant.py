@@ -1,0 +1,85 @@
+"""Int8 weight-only quantization for serving (§Perf beyond-paper C2).
+
+Decode is weight-read-bound once the KV cache is sharded; int8 weights
+halve the per-token HBM weight traffic AND remove the FSDP gather (the
+whole TP shard fits residently). Layer weights are stored as
+{"q": int8, "scale": f32[out_channels]} and dequantized per layer *inside*
+the scan body, so the bf16 copy never materializes globally.
+
+Only transformer-block weights (ndim >= 2, bf16) quantize; norms/scalars
+and the embedding/lm-head tables stay bf16 (they are gathered per token).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import Param, is_param
+
+
+def _quantizable(p: Param) -> bool:
+    return len(p.shape) >= 2 and p.dtype == jnp.bfloat16
+
+
+def quantize_spec_tree(tree):
+    """Param-spec tree -> same tree with {"q", "scale"} leaf dicts."""
+
+    def q(p: Param):
+        if not _quantizable(p):
+            return p
+        if len(p.shape) >= 3:  # stacked layers / experts: per-slice scales
+            sshape, saxes = (p.shape[0], p.shape[-1]), (p.axes[0], p.axes[-1])
+        else:
+            sshape, saxes = p.shape[-1:], (p.axes[-1],)
+        return {
+            "q": dataclasses.replace(p, dtype=jnp.int8),
+            "scale": Param(sshape, saxes, dtype=jnp.float32, init="ones"),
+        }
+
+    return jax.tree_util.tree_map(q, tree, is_leaf=is_param)
+
+
+def quantize_arrays(tree):
+    """Real bf16 arrays -> int8 + per-out-channel scales (symmetric)."""
+
+    def q(arr):
+        if not (hasattr(arr, "ndim") and arr.ndim >= 2
+                and arr.dtype == jnp.bfloat16):
+            return arr
+        a = arr.astype(jnp.float32)
+        if a.ndim >= 3:
+            red = tuple(range(1, a.ndim - 1))  # per (slice, out-channel)
+        else:
+            red = tuple(range(a.ndim - 1))
+        amax = jnp.maximum(jnp.max(jnp.abs(a), axis=red), 1e-8)
+        scale = amax / 127.0
+        bshape = ((scale.shape[0],) + (1,) * (a.ndim - 2) + (scale.shape[-1],)
+                  if a.ndim >= 3 else scale.shape)
+        qv = jnp.clip(jnp.round(a / scale.reshape(bshape)),
+                      -127, 127).astype(jnp.int8)
+        return {"q": qv, "scale": scale}
+
+    return jax.tree_util.tree_map(q, tree)
+
+
+def is_qleaf(x) -> bool:
+    return isinstance(x, dict) and set(x.keys()) == {"q", "scale"}
+
+
+def dequant_tree(tree):
+    """{"q","scale"} dicts -> bf16 arrays (applied per scanned layer slice
+    so the full-precision copy is fused into the consumer, not stored)."""
+
+    def d(x):
+        if is_qleaf(x):
+            q, s = x["q"], x["scale"]
+            if q.ndim >= 3 and s.ndim == 2:
+                s = s.reshape((s.shape[0],) + (1,) * (q.ndim - 2)
+                              + (s.shape[-1],))
+            return q.astype(jnp.bfloat16) * s.astype(jnp.bfloat16)
+        return x
+
+    return jax.tree_util.tree_map(d, tree, is_leaf=is_qleaf)

@@ -1,0 +1,178 @@
+"""Multi-tenant continuous-batching serving engine.
+
+Requests from multiple tenants (ASIDs) share one model + one paged KV pool.
+Scheduling is the paper's three-class discipline (repro.core.dram_sched
+semantics transplanted to request admission, §5.4):
+
+  Golden — translation/metadata work (page allocation, table updates,
+           admission) always runs before token work each step.
+  Silver — one tenant at a time gets guaranteed decode slots, quota
+           proportional to Concurrent_i * Stalled_i (Eq. 1 analogue:
+           in-flight sequences x queue depth).
+  Normal — remaining decode slots round-robin over other tenants.
+
+Per-tenant throughput / weighted-speedup metrics mirror the paper's
+evaluation (serving.metrics).
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.memmgr import kv_cache as kvc
+from repro.models import model as M
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    tenant: int
+    prompt: np.ndarray
+    max_new: int
+    out: List[int] = dataclasses.field(default_factory=list)
+    seq_slot: int = -1
+    submit_step: int = 0
+    finish_step: int = -1
+
+
+@dataclasses.dataclass
+class EngineConfig:
+    max_batch: int = 8
+    thres_max: int = 16          # silver quota scale
+    decode_len_cap: int = 256
+
+
+class ServingEngine:
+    """CPU-scale reference engine (smoke/examples); the same scheduling laws
+    drive the dry-run serve_step at production shapes."""
+
+    def __init__(self, cfg: ModelConfig, run: RunConfig, params,
+                 pool_cfg: kvc.PoolConfig, ecfg: EngineConfig = EngineConfig()):
+        self.cfg = cfg
+        self.run = run
+        self.params = params
+        self.pool_cfg = pool_cfg
+        self.ecfg = ecfg
+        self.pool = kvc.init(pool_cfg)
+        self.queues: Dict[int, deque] = {}
+        self.running: List[Request] = []
+        self.finished: List[Request] = []
+        self.step_count = 0
+        self.silver_tenant = 0
+        self.silver_left = 1
+        self._free_slots = list(range(pool_cfg.max_seqs))
+        self._decode = None
+        self._prefill_cache: Dict[int, tuple] = {}
+
+    # ------------------------------------------------------------- API
+    def submit(self, req: Request):
+        req.submit_step = self.step_count
+        self.queues.setdefault(req.tenant, deque()).append(req)
+
+    def _quota(self) -> Dict[int, int]:
+        """Eq. (1) analogue over tenants with queued work."""
+        w = {t: max(len(q), 1) * (1 + sum(1 for r in self.running
+                                          if r.tenant == t))
+             for t, q in self.queues.items() if q}
+        tot = sum(w.values()) or 1
+        return {t: max(self.ecfg.thres_max * v // tot, 1)
+                for t, v in w.items()}
+
+    # ------------------------------------------------------- scheduling
+    def _admit(self):
+        """Golden phase: admissions + page allocation first."""
+        tenants = sorted(self.queues)
+        # silver tenant first
+        order = ([self.silver_tenant] +
+                 [t for t in tenants if t != self.silver_tenant])
+        for t in order:
+            q = self.queues.get(t)
+            while (q and len(self.running) < self.ecfg.max_batch
+                   and self._free_slots):
+                req = q.popleft()
+                slot = self._free_slots.pop()
+                self.pool, ok = kvc.admit_seq(
+                    self.pool_cfg, self.pool, jnp.int32(slot),
+                    jnp.int32(t), jnp.int32(len(req.prompt)))
+                if not bool(ok):
+                    self._free_slots.append(slot)
+                    q.appendleft(req)
+                    break
+                req.seq_slot = slot
+                self._prefill(req)
+                self.running.append(req)
+
+    def _prefill(self, req: Request):
+        batch = {"tokens": jnp.asarray(req.prompt, jnp.int32)[None]}
+        if self.cfg.n_patches:
+            batch["patch_embeds"] = jnp.zeros(
+                (1, self.cfg.n_patches, self.cfg.d_model), jnp.bfloat16)
+        if self.cfg.is_enc_dec:
+            batch["frames"] = jnp.zeros(
+                (1, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
+        logits, caches = M.forward_prefill(
+            self.cfg, self.run, self.params, batch,
+            max_len=self.pool_cfg.pages_per_seq * self.pool_cfg.page_size)
+        tok = int(jnp.argmax(logits[0, -1]))
+        req.out.append(tok)
+        self._prefill_cache[req.rid] = caches
+
+    def _select_decode_batch(self) -> List[Request]:
+        quota = self._quota()
+        silver = [r for r in self.running if r.tenant == self.silver_tenant]
+        others = [r for r in self.running if r.tenant != self.silver_tenant]
+        batch = silver[: max(self.silver_left, 0)] + others
+        return batch[: self.ecfg.max_batch]
+
+    def step(self):
+        """One engine iteration: golden (admit/alloc) -> silver/normal decode."""
+        self.step_count += 1
+        self._admit()
+        batch = self._select_decode_batch()
+        if not batch:
+            return
+        done = []
+        for req in batch:  # reference implementation decodes per-request
+            caches = self._prefill_cache[req.rid]
+            tok = jnp.asarray([[req.out[-1]]], jnp.int32)
+            logits, caches = M.forward_decode(
+                self.cfg, self.run, self.params, {"tokens": tok}, caches)
+            self._prefill_cache[req.rid] = caches
+            nxt = int(jnp.argmax(logits[0, -1]))
+            req.out.append(nxt)
+            self.pool, ok = kvc.append_token_alloc(
+                self.pool_cfg, self.pool, jnp.int32(req.seq_slot))
+            if len(req.out) >= min(req.max_new, self.ecfg.decode_len_cap):
+                done.append(req)
+        # silver rotation
+        self.silver_left -= sum(1 for r in batch
+                                if r.tenant == self.silver_tenant)
+        if self.silver_left <= 0 and self.queues:
+            tenants = sorted(set(list(self.queues) +
+                                 [r.tenant for r in self.running]))
+            if tenants:
+                ix = (tenants.index(self.silver_tenant) + 1) % len(tenants) \
+                    if self.silver_tenant in tenants else 0
+                self.silver_tenant = tenants[ix]
+                self.silver_left = self._quota().get(self.silver_tenant, 1)
+        for req in done:
+            req.finish_step = self.step_count
+            self.running.remove(req)
+            self.pool = kvc.release_seq(self.pool_cfg, self.pool,
+                                        jnp.int32(req.seq_slot))
+            self._free_slots.append(req.seq_slot)
+            self._prefill_cache.pop(req.rid, None)
+            self.finished.append(req)
+
+    def run_until_drained(self, max_steps: int = 1000):
+        for _ in range(max_steps):
+            if not self.running and not any(self.queues.values()):
+                break
+            self.step()
+        return self.finished

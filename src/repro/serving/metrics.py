@@ -1,0 +1,29 @@
+"""Per-tenant fairness/throughput metrics (weighted speedup, max slowdown)
+— the paper's evaluation metrics applied to the serving engine."""
+from __future__ import annotations
+
+from collections import defaultdict
+from typing import Dict, List
+
+
+def tenant_throughput(finished, total_steps: int) -> Dict[int, float]:
+    toks = defaultdict(int)
+    for r in finished:
+        toks[r.tenant] += len(r.out)
+    return {t: n / max(total_steps, 1) for t, n in toks.items()}
+
+
+def weighted_speedup(shared: Dict[int, float],
+                     alone: Dict[int, float]) -> float:
+    return sum(shared[t] / max(alone.get(t, 1e-9), 1e-9) for t in shared)
+
+
+def max_slowdown(shared: Dict[int, float], alone: Dict[int, float]) -> float:
+    return max(max(alone.get(t, 0.0), 1e-9) / max(v, 1e-9)
+               for t, v in shared.items())
+
+
+def mean_latency(finished) -> float:
+    if not finished:
+        return 0.0
+    return sum(r.finish_step - r.submit_step for r in finished) / len(finished)

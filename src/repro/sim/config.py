@@ -1,0 +1,34 @@
+"""Simulator configuration (paper Table 1, Maxwell-class)."""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.core.mask import DesignPoint, MaskConfig, design
+
+
+@dataclasses.dataclass(frozen=True)
+class SimConfig:
+    n_cores: int = 30
+    warps_per_core: int = 32
+    n_apps: int = 2
+    # L2 data cache: 2MB, 16-way, 128B lines -> 1024 sets
+    l2_sets: int = 1024
+    l2_ways: int = 16
+    # page-walk cache (Fig. 2a design): 16-way, 1024 entries (§3 fn. 2)
+    pwc_entries: int = 1024
+    pwc_ways: int = 16
+    # DRAM: 8 channels x 8 banks
+    n_channels: int = 8
+    n_banks: int = 8
+    # latencies (cycles)
+    lat_l1_tlb: int = 1
+    lat_l2_tlb: int = 10
+    lat_l2_cache: int = 10
+    lat_l1_data: int = 1
+    sim_cycles: int = 60_000
+    design: DesignPoint = dataclasses.field(
+        default_factory=lambda: design("gpu-mmu"))
+
+    @property
+    def total_warps(self) -> int:
+        return self.n_cores * self.warps_per_core

@@ -1,0 +1,426 @@
+"""Vectorized memory-hierarchy simulator: one-cycle transition function.
+
+Per cycle: each shader core's scheduler (GTO-like: oldest-ready-first) picks
+one ready warp, which issues one memory instruction. The request flows
+through: per-core L1 TLB -> shared L2 TLB (+ bypass cache) -> page walker
+(4 dependent PTE accesses through the shared L2 data cache / DRAM) -> data
+access (L1D -> shared L2 -> DRAM). Warps stall until their latency resolves;
+concurrent walks to the same (ASID, VPN) merge MSHR-style (Fig. 4's
+multi-warp stalls). Every design point of the paper (ideal / PWC / GPU-MMU /
+Static / MASK±components) is this same function with different switches.
+
+All state lives in `SimState` arrays -> the whole run is one lax.scan.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bypass as bp_mod
+from repro.core import dram_sched
+from repro.core import page_table as pt_mod
+from repro.core import tlb as tlb_mod
+from repro.core import tokens as tok_mod
+from repro.core.page_table import _mix
+from repro.sim.config import SimConfig
+from repro.sim.workloads import N_FIELDS, gen_vpn
+
+WALK_TABLE = 64          # concurrent page walks (Table 1)
+BIG = jnp.int32(1 << 30)
+
+
+class SimState(NamedTuple):
+    t: jax.Array                 # () int32
+    stall_until: jax.Array       # (W,) int32
+    instr: jax.Array             # (W,) int64-ish float32 retired instructions
+    pos: jax.Array               # (W,) int32 stream position
+    l1_tags: jax.Array           # (cores, L1E) int32 vpn
+    l1_asid: jax.Array           # (cores, L1E) int32
+    l1_lru: jax.Array            # (cores, L1E) int32
+    l2tlb: tlb_mod.TLBState
+    bypass_tlb: tlb_mod.TLBState
+    pwc: tlb_mod.TLBState        # page-walk cache (PTE lines)
+    l2c: tlb_mod.TLBState        # shared L2 data cache (line-addressed)
+    tokens: tok_mod.TokenState
+    bypass: bp_mod.BypassState
+    dram: dram_sched.DramState
+    walk_vpn: jax.Array          # (WALK_TABLE,) int32
+    walk_asid: jax.Array         # (WALK_TABLE,)
+    walk_done: jax.Array         # (WALK_TABLE,) int32 completion time
+    walk_merged: jax.Array       # (WALK_TABLE,) int32 warps merged onto walk
+    # statistics
+    s_l1_hit: jax.Array          # (n_apps,)
+    s_l1_miss: jax.Array
+    s_l2_hit: jax.Array
+    s_l2_miss: jax.Array
+    s_byp_hit: jax.Array         # bypass-cache hits
+    s_byp_probe: jax.Array       # bypass-cache probes
+    s_walk_lat: jax.Array        # (n_apps,) float32 summed walk latency
+    s_walks: jax.Array           # (n_apps,)
+    s_stall_per_miss: jax.Array  # accumulated merged-warp counts
+    s_dram_tlb_lat: jax.Array    # (n_apps,) float32
+    s_dram_tlb_n: jax.Array
+    s_dram_data_lat: jax.Array
+    s_dram_data_n: jax.Array
+    s_l2c_tlb_hit: jax.Array     # () cumulative L2$ hits for walk requests
+    s_l2c_tlb_probe: jax.Array
+    s_l2c_data_hit: jax.Array
+    s_l2c_data_probe: jax.Array
+
+
+def init_state(cfg: SimConfig) -> SimState:
+    W = cfg.total_warps
+    m = cfg.design.mask
+    na = cfg.n_apps
+    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    zf = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
+    warps_per_app = jnp.full((na,), W // na, jnp.int32)
+    return SimState(
+        t=jnp.zeros((), jnp.int32),
+        stall_until=z(W),
+        instr=zf(W),
+        pos=z(W),
+        l1_tags=jnp.full((cfg.n_cores, m.l1_tlb_entries), -1, jnp.int32),
+        l1_asid=jnp.full((cfg.n_cores, m.l1_tlb_entries), -1, jnp.int32),
+        l1_lru=z(cfg.n_cores, m.l1_tlb_entries),
+        l2tlb=tlb_mod.init(m.l2_tlb_entries, m.l2_tlb_ways),
+        bypass_tlb=tlb_mod.init(m.bypass_cache_entries,
+                                m.bypass_cache_entries),
+        pwc=tlb_mod.init(cfg.pwc_entries, cfg.pwc_ways),
+        l2c=tlb_mod.init(cfg.l2_sets * cfg.l2_ways, cfg.l2_ways),
+        tokens=tok_mod.init(na, warps_per_app, m.initial_token_frac),
+        bypass=bp_mod.init(),
+        dram=dram_sched.init(cfg.n_channels, cfg.n_banks, na),
+        walk_vpn=jnp.full((WALK_TABLE,), -1, jnp.int32),
+        walk_asid=jnp.full((WALK_TABLE,), -1, jnp.int32),
+        walk_done=z(WALK_TABLE),
+        walk_merged=z(WALK_TABLE),
+        s_l1_hit=z(na), s_l1_miss=z(na), s_l2_hit=z(na), s_l2_miss=z(na),
+        s_byp_hit=z(na), s_byp_probe=z(na),
+        s_walk_lat=zf(na), s_walks=z(na), s_stall_per_miss=zf(na),
+        s_dram_tlb_lat=zf(na), s_dram_tlb_n=z(na),
+        s_dram_data_lat=zf(na), s_dram_data_n=z(na),
+        s_l2c_tlb_hit=z(), s_l2c_tlb_probe=z(),
+        s_l2c_data_hit=z(), s_l2c_data_probe=z(),
+    )
+
+
+# ---------------------------------------------------------------------------
+# helpers
+# ---------------------------------------------------------------------------
+
+def _per_core_l1_probe(tags, asids, lru, vpn, asid, t):
+    """FA L1 TLB probe+LRU for one request per core. tags: (C, E)."""
+    match = (tags == vpn[:, None]) & (asids == asid[:, None])
+    hit = match.any(axis=1)
+    way = jnp.argmax(match, axis=1)
+    cidx = jnp.arange(tags.shape[0])
+    lru = lru.at[cidx, way].set(jnp.where(hit, t, lru[cidx, way]))
+    return hit, lru
+
+
+def _per_core_l1_fill(tags, asids, lru, vpn, asid, do_fill, t):
+    victim = jnp.argmin(lru, axis=1)
+    cidx = jnp.arange(tags.shape[0])
+    sel = lambda new, old: jnp.where(do_fill, new, old)  # noqa: E731
+    tags = tags.at[cidx, victim].set(sel(vpn, tags[cidx, victim]))
+    asids = asids.at[cidx, victim].set(sel(asid, asids[cidx, victim]))
+    lru = lru.at[cidx, victim].set(sel(t, lru[cidx, victim]))
+    return tags, asids, lru
+
+
+def _l2_cache_access(cfg: SimConfig, l2c, dram, line, app, is_tlb, depth_tag,
+                     may_fill, active, t, static_split):
+    """Shared L2 data cache + DRAM for a batch of line addresses.
+
+    Returns (l2c', dram', latency, l2_hit). `may_fill` implements the MASK
+    L2 bypass decision; `static_split` gives each app half the ways by
+    restricting its set index range (Static design)."""
+    m = cfg.design.mask
+    key = jnp.where(static_split,
+                    (line % (cfg.l2_sets // cfg.n_apps))
+                    + app * (cfg.l2_sets // cfg.n_apps),
+                    line % cfg.l2_sets)
+    # reuse TLB machinery: tag = full line id, "asid" field = 0
+    zero = jnp.zeros_like(line)
+    tagged = key * 0 + line  # probe on line id within the selected set
+    l2c, hit = tlb_mod.probe(l2c._replace(), tagged * cfg.l2_sets + key,
+                             zero, active, t)
+    lat = jnp.where(hit, cfg.lat_l2_cache, 0)
+    miss = active & ~hit
+
+    channel = (line % cfg.n_channels).astype(jnp.int32)
+    channel = jnp.where(static_split,
+                        (line % (cfg.n_channels // cfg.n_apps))
+                        + app * (cfg.n_channels // cfg.n_apps), channel)
+    bank = ((line // cfg.n_channels) % cfg.n_banks).astype(jnp.int32)
+    row = (line // (cfg.n_channels * cfg.n_banks * 32)).astype(jnp.int32)
+    dram, dlat = dram_sched.access(
+        dram, channel, bank, row, app, is_tlb, miss,
+        mask_enabled=m.dram_sched, thres_max=m.thres_max)
+    lat = lat + jnp.where(miss, cfg.lat_l2_cache + dlat, 0)
+    l2c = tlb_mod.fill(l2c, tagged * cfg.l2_sets + key, zero,
+                       miss & may_fill, t)
+    return l2c, dram, lat, hit
+
+
+def step(cfg: SimConfig, params_mat, state: SimState):
+    """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params."""
+    m = cfg.design.mask
+    W, C, na = cfg.total_warps, cfg.n_cores, cfg.n_apps
+    warps_per_core = cfg.warps_per_core
+    t = state.t + 1
+
+    # ---------------- warp selection (oldest-ready per core) -------------
+    warp_id = jnp.arange(W)
+    core_of = warp_id // warps_per_core
+    slot_of = warp_id % warps_per_core
+    # cores are partitioned evenly between apps (oracle split, §6)
+    app_of_core = (jnp.arange(C) * na) // C
+    app_of = app_of_core[core_of]
+
+    ready = state.stall_until <= t
+    waiting = jnp.where(ready, t - state.stall_until, -1)
+    wait_grid = waiting.reshape(C, warps_per_core)
+    pick = jnp.argmax(wait_grid, axis=1)                  # (C,)
+    picked_warp = jnp.arange(C) * warps_per_core + pick
+    active = wait_grid[jnp.arange(C), pick] >= 0          # (C,)
+
+    app = app_of[picked_warp]
+    pos = state.pos[picked_warp]
+    vpn = gen_vpn(params_mat[app], app, picked_warp, pos, t)
+    asid = app  # one address space per application
+
+    # ---------------- L1 TLB ------------------------------------------
+    l1_hit, l1_lru = _per_core_l1_probe(
+        state.l1_tags, state.l1_asid, state.l1_lru, vpn, asid, t)
+    l1_hit = l1_hit & active
+    if cfg.design.ideal_tlb:
+        l1_hit = active
+
+    l1_miss = active & ~l1_hit
+
+    # ---------------- shared L2 TLB + bypass cache ---------------------
+    use_l2tlb = cfg.design.use_l2_tlb and not cfg.design.ideal_tlb
+    l2tlb, byp_tlb = state.l2tlb, state.bypass_tlb
+    if use_l2tlb:
+        l2tlb, l2_hit = tlb_mod.probe(l2tlb, vpn, asid, l1_miss, t)
+        if m.tlb_tokens:
+            byp_tlb, byp_hit = tlb_mod.probe(byp_tlb, vpn, asid,
+                                             l1_miss & ~l2_hit, t)
+            l2_hit_eff = l2_hit | byp_hit
+        else:
+            byp_hit = jnp.zeros_like(l2_hit)
+            l2_hit_eff = l2_hit
+    else:
+        l2_hit = jnp.zeros_like(l1_miss)
+        byp_hit = jnp.zeros_like(l1_miss)
+        l2_hit_eff = l2_hit
+
+    need_walk = l1_miss & ~l2_hit_eff
+
+    # ---------------- page walk (4 dependent PTE accesses) -------------
+    # MSHR merge: outstanding walk for same (vpn, asid)?
+    wmatch = (state.walk_vpn[None, :] == vpn[:, None]) & \
+             (state.walk_asid[None, :] == asid[:, None]) & \
+             (state.walk_done[None, :] > t)
+    merged = wmatch.any(axis=1) & need_walk
+    merge_done = jnp.where(
+        merged, jnp.max(jnp.where(wmatch, state.walk_done[None, :], 0),
+                        axis=1), 0)
+
+    new_walk = need_walk & ~merged
+    n_live = (state.walk_done > t).sum()
+    # walker occupancy queue penalty (64 walker threads)
+    over = jnp.maximum(n_live + jnp.cumsum(new_walk) - WALK_TABLE, 0)
+    queue_pen = over * 30
+
+    pte_lines = pt_mod.pte_line_addresses(
+        pt_mod.PageTableConfig(levels=m.walk_levels), asid, vpn)  # (C, L)
+
+    walk_lat = jnp.zeros((C,), jnp.int32)
+    dram_tlb_lat = jnp.zeros((C,), jnp.float32)
+    dram_tlb_n = jnp.zeros((C,), jnp.int32)
+    l2c, dram, bp_state = state.l2c, state.dram, state.bypass
+    pwc = state.pwc
+    static = jnp.asarray(cfg.design.static_partition)
+    for lvl in range(m.walk_levels):
+        line = pte_lines[:, lvl]
+        lvl_active = new_walk
+        depth_tag = jnp.full((C,), pt_mod.walk_depth_tag(lvl), jnp.int32)
+        if cfg.design.use_pwc:
+            pwc, pwc_hit = tlb_mod.probe(pwc, line, asid * 0, lvl_active, t)
+            pwc = tlb_mod.fill(pwc, line, asid * 0, lvl_active & ~pwc_hit, t)
+            go_l2 = lvl_active & ~pwc_hit
+            walk_lat = walk_lat + jnp.where(lvl_active & pwc_hit, 5, 0)
+        else:
+            go_l2 = lvl_active
+        if m.l2_bypass:
+            may_fill = bp_mod.should_fill(bp_state, depth_tag)
+        else:
+            may_fill = jnp.ones((C,), bool)
+        l2c, dram, lat, l2hit = _l2_cache_access(
+            cfg, l2c, dram, line, app, jnp.ones((C,), bool), depth_tag,
+            may_fill, go_l2, t, static)
+        bp_state = bp_mod.record(bp_state, depth_tag, l2hit, go_l2)
+        walk_lat = walk_lat + jnp.where(go_l2, lat, 0)
+        went_dram = go_l2 & ~l2hit
+        dram_tlb_lat = dram_tlb_lat + jnp.where(went_dram, lat, 0)
+        dram_tlb_n = dram_tlb_n + went_dram.astype(jnp.int32)
+        c_tlb_hit = (go_l2 & l2hit).sum(dtype=jnp.int32)
+        c_tlb_probe = go_l2.sum(dtype=jnp.int32)
+        if lvl == 0:
+            cum_tlb_hit, cum_tlb_probe = c_tlb_hit, c_tlb_probe
+        else:
+            cum_tlb_hit = cum_tlb_hit + c_tlb_hit
+            cum_tlb_probe = cum_tlb_probe + c_tlb_probe
+
+    walk_lat = walk_lat + queue_pen
+    walk_done_new = t + cfg.lat_l2_tlb + walk_lat
+
+    # install new walks into free slots (expired entries are free)
+    free = state.walk_done <= t
+    order_slots = jnp.cumsum(new_walk) - 1
+    free_idx = jnp.where(free, jnp.arange(WALK_TABLE), BIG)
+    free_sorted = jnp.sort(free_idx)
+    slot_for = jnp.where(new_walk,
+                         free_sorted[jnp.clip(order_slots, 0, WALK_TABLE - 1)],
+                         BIG)
+    can_install = slot_for < WALK_TABLE
+    slot_safe = jnp.clip(slot_for, 0, WALK_TABLE - 1).astype(jnp.int32)
+    inst = new_walk & can_install
+    walk_vpn = state.walk_vpn.at[slot_safe].set(
+        jnp.where(inst, vpn, state.walk_vpn[slot_safe]))
+    walk_asid = state.walk_asid.at[slot_safe].set(
+        jnp.where(inst, asid, state.walk_asid[slot_safe]))
+    walk_done = state.walk_done.at[slot_safe].set(
+        jnp.where(inst, walk_done_new, state.walk_done[slot_safe]))
+    walk_merged_arr = state.walk_merged.at[slot_safe].set(
+        jnp.where(inst, 1, state.walk_merged[slot_safe]))
+    # bump merge counters
+    first_match = jnp.argmax(wmatch, axis=1)
+    walk_merged_arr = walk_merged_arr.at[first_match].add(
+        jnp.where(merged, 1, 0))
+
+    # ---------------- translation latency ------------------------------
+    trans_lat = jnp.where(
+        l1_hit, cfg.lat_l1_tlb,
+        jnp.where(l2_hit_eff, cfg.lat_l2_tlb,
+                  jnp.where(merged, jnp.maximum(merge_done - t, 1),
+                            jnp.maximum(walk_done_new - t, 1))))
+    if cfg.design.ideal_tlb:
+        trans_lat = jnp.where(active, cfg.lat_l1_tlb, 0)
+
+    # ---------------- TLB fills on walk return -------------------------
+    if use_l2tlb:
+        if m.tlb_tokens:
+            # tokens are distributed round-robin over the app's cores in
+            # warpID order: per-core allowance = tokens / cores_per_app
+            cores_per_app = C // na
+            tok_per_core = state.tokens.tokens[app] // cores_per_app
+            has_tok = slot_of[picked_warp] < tok_per_core
+            fill_l2 = need_walk & has_tok & ~state.tokens.first_epoch
+            fill_l2 = fill_l2 | (need_walk & state.tokens.first_epoch)
+            fill_byp = need_walk & ~fill_l2
+            byp_tlb = tlb_mod.fill(byp_tlb, vpn, asid, fill_byp, t)
+        else:
+            fill_l2 = need_walk
+        l2tlb = tlb_mod.fill(l2tlb, vpn, asid, fill_l2, t)
+    l1_tags, l1_asid_arr, l1_lru = _per_core_l1_fill(
+        state.l1_tags, state.l1_asid, l1_lru, vpn, asid, l1_miss, t)
+
+    # ---------------- data access --------------------------------------
+    pfn = pt_mod.translate(pt_mod.PageTableConfig(), asid, vpn)
+    r = _mix(pfn.astype(jnp.uint32) + pos.astype(jnp.uint32))
+    l1d_hit = (r % jnp.uint32(1024)).astype(jnp.int32) \
+        < params_mat[app, 6]
+    # warp-wide (divergent) data access: one memory instruction touches
+    # DATA_WIDTH cache lines, serviced in parallel (latency = max). This is
+    # what gives data traffic its realistic flooding pressure on the shared
+    # L2 relative to page-walk traffic.
+    DATA_WIDTH = 4
+    go_l2d = active & ~l1d_hit
+    dlat = jnp.zeros((C,), jnp.int32)
+    l2d_hit_any = jnp.zeros((C,), bool)
+    for k in range(DATA_WIDTH):
+        r3 = _mix(r + jnp.uint32((0x85EBCA6B + 0x9E3779B9 * k) & 0xFFFFFFFF))
+        data_line = pfn * 32 + (r3 % jnp.uint32(32)).astype(jnp.int32)
+        l2c, dram, dlat_k, l2d_hit = _l2_cache_access(
+            cfg, l2c, dram, data_line, app, jnp.zeros((C,), bool),
+            jnp.zeros((C,), jnp.int32), jnp.ones((C,), bool), go_l2d, t,
+            static)
+        dlat = jnp.maximum(dlat, dlat_k)
+        l2d_hit_any = l2d_hit_any | l2d_hit
+        bp_state = bp_mod.record(bp_state, jnp.zeros((C,), jnp.int32),
+                                 l2d_hit, go_l2d)
+    l2d_hit = l2d_hit_any
+    data_lat = jnp.where(l1d_hit, cfg.lat_l1_data, cfg.lat_l1_data + dlat)
+
+    # ---------------- retire / stall ------------------------------------
+    gap = params_mat[app, 5]
+    total_lat = trans_lat + data_lat + gap
+    stall_until = state.stall_until.at[picked_warp].set(
+        jnp.where(active, t + total_lat, state.stall_until[picked_warp]))
+    instr = state.instr.at[picked_warp].add(
+        jnp.where(active, (1 + gap).astype(jnp.float32), 0.0))
+    pos_new = state.pos.at[picked_warp].add(jnp.where(active, 1, 0))
+
+    # ---------------- statistics ----------------------------------------
+    oh = jax.nn.one_hot(app, na, dtype=jnp.int32) * active[:, None]
+    ohf = oh.astype(jnp.float32)
+    tokens = tok_mod.record(state.tokens, app, l2_hit_eff, l1_miss)
+    st = dict(
+        s_l1_hit=state.s_l1_hit + (oh * l1_hit[:, None]).sum(0),
+        s_l1_miss=state.s_l1_miss + (oh * l1_miss[:, None]).sum(0),
+        s_l2_hit=state.s_l2_hit + (oh * l2_hit[:, None]).sum(0),
+        s_l2_miss=state.s_l2_miss + (oh * need_walk[:, None]).sum(0),
+        s_byp_hit=state.s_byp_hit + (oh * byp_hit[:, None]).sum(0),
+        s_byp_probe=state.s_byp_probe + (oh * (l1_miss & ~l2_hit)[:, None]).sum(0),
+        s_walk_lat=state.s_walk_lat
+        + (ohf * jnp.where(new_walk, walk_done_new - t, 0)[:, None]).sum(0),
+        s_walks=state.s_walks + (oh * new_walk[:, None]).sum(0),
+        s_stall_per_miss=state.s_stall_per_miss
+        + (ohf * merged[:, None]).sum(0),
+    )
+
+    # ---------------- epoch maintenance ---------------------------------
+    def do_epoch(args):
+        tokens, dram, bp = args
+        warps_per_app = jnp.full((na,), W // na, jnp.int32)
+        conc = jnp.zeros((na,), jnp.int32).at[
+            jnp.clip(state.walk_asid, 0, na - 1)].add(
+            (state.walk_done > t).astype(jnp.int32))
+        stalled = jnp.zeros((na,), jnp.int32).at[
+            jnp.clip(state.walk_asid, 0, na - 1)].add(
+            state.walk_merged * (state.walk_done > t))
+        dram = dram_sched.update_pressure(dram, conc, stalled)
+        return (tok_mod.epoch_update(tokens, warps_per_app,
+                                     step_frac=m.token_step_frac), dram,
+                bp_mod.epoch_update(bp))
+
+    is_epoch = (t % m.epoch_cycles) == 0
+    tokens, dram, bp_state = jax.lax.cond(
+        is_epoch & jnp.asarray(m.tlb_tokens or m.dram_sched or m.l2_bypass),
+        do_epoch, lambda args: args, (tokens, dram, bp_state))
+
+    return SimState(
+        t=t, stall_until=stall_until, instr=instr, pos=pos_new,
+        l1_tags=l1_tags, l1_asid=l1_asid_arr, l1_lru=l1_lru,
+        l2tlb=l2tlb, bypass_tlb=byp_tlb, pwc=pwc, l2c=l2c,
+        tokens=tokens, bypass=bp_state, dram=dram,
+        walk_vpn=walk_vpn, walk_asid=walk_asid, walk_done=walk_done,
+        walk_merged=walk_merged_arr,
+        s_dram_tlb_lat=state.s_dram_tlb_lat + (ohf * dram_tlb_lat[:, None]).sum(0),
+        s_dram_tlb_n=state.s_dram_tlb_n + (oh * dram_tlb_n[:, None]).sum(0),
+        s_dram_data_lat=state.s_dram_data_lat
+        + (ohf * jnp.where(go_l2d, dlat, 0)[:, None]).sum(0),
+        s_dram_data_n=state.s_dram_data_n + (oh * go_l2d[:, None]).sum(0),
+        s_l2c_tlb_hit=state.s_l2c_tlb_hit + cum_tlb_hit,
+        s_l2c_tlb_probe=state.s_l2c_tlb_probe + cum_tlb_probe,
+        s_l2c_data_hit=state.s_l2c_data_hit
+        + (go_l2d & l2d_hit).sum(dtype=jnp.int32),
+        s_l2c_data_probe=state.s_l2c_data_probe + go_l2d.sum(dtype=jnp.int32),
+        **st,
+    )

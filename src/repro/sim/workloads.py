@@ -1,0 +1,180 @@
+"""Synthetic GPGPU address-stream generators.
+
+The paper's 27 benchmarks (Table 2) fall into four locality categories by
+(L1 TLB, L2 TLB) miss rates. We synthesize one deterministic generator per
+benchmark: parameters are drawn per-category with a stable per-name jitter,
+so 3DS ≠ BLK but both stress the TLB the way the paper's high/high class
+does. Streams mix: sequential striding (spatial locality), a hot page set
+(temporal locality), and uniform-random far pages (reach).
+"""
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from typing import Dict, List, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.page_table import _mix
+
+# Table 2 categorization
+CATEGORY: Dict[str, Tuple[str, str]] = {}
+for _n in ("LUD", "NN"):
+    CATEGORY[_n] = ("low", "low")
+for _n in ("BFS2", "FFT", "HISTO", "NW", "QTC", "RAY", "SAD", "SCP"):
+    CATEGORY[_n] = ("low", "high")
+for _n in ("BP", "GUP", "HS", "LPS"):
+    CATEGORY[_n] = ("high", "low")
+for _n in ("3DS", "BLK", "CFD", "CONS", "FWT", "LUH", "MM", "MUM", "RED",
+           "SC", "SCAN", "SRAD", "TRD"):
+    CATEGORY[_n] = ("high", "high")
+
+BENCHES: List[str] = sorted(CATEGORY)
+
+
+@dataclasses.dataclass(frozen=True)
+class AppParams:
+    """Traced-friendly scalar params of one application's stream.
+
+    Four temperature tiers: hot (zipf, app-global), warm (PER WARP-GROUP
+    working sets reused on a shared-L2-TLB timescale — the tier MASK's
+    tokens protect: restricting fills to token-holding groups shrinks the
+    active footprint until it fits), sequential streams (page-spatial
+    locality, shared within a group -> MSHR merges), and cold-random reach.
+    """
+
+    name: str
+    ws_pages: int        # total working-set size in pages (cold reach)
+    hot_pages: int       # zipf-hot subset
+    hot_milli: int       # P(hot access) in 1/1024
+    warm_pages: int      # per-group mid-temperature set (L2-TLB-scale reuse)
+    warm_milli: int      # P(warm access)
+    seq_milli: int       # P(sequential-stream access)
+    stride: int          # pages per sequential step
+    gap: int             # compute instructions between memory ops
+    l1d_hit_milli: int   # L1 data-cache hit probability (1/1024)
+    revisit: int         # accesses per page before moving on (spatial loc.)
+
+    def as_array(self) -> np.ndarray:
+        return np.array([self.ws_pages, self.hot_pages, self.hot_milli,
+                         self.warm_pages, self.warm_milli, self.seq_milli,
+                         self.stride, self.gap, self.l1d_hit_milli,
+                         self.revisit], np.int32)
+
+
+N_FIELDS = 10
+
+
+def _jitter(name: str, lo: float, hi: float) -> float:
+    h = int(hashlib.md5(name.encode()).hexdigest()[:8], 16)
+    return lo + (h / 0xFFFFFFFF) * (hi - lo)
+
+
+def make_app(name: str) -> AppParams:
+    l1c, l2c = CATEGORY[name]
+    j = lambda lo, hi: _jitter(name, lo, hi)  # noqa: E731
+    warm, warm_m = 1, 0
+    if (l1c, l2c) == ("low", "low"):
+        # tiny working set: everything fits the 64-entry L1 TLB
+        ws = int(j(24, 48))
+        hot, hot_m, seq_m, rev = ws // 2, 700, 280, 24
+    elif (l1c, l2c) == ("low", "high"):
+        # streaming: strong page-level spatial reuse (L1 hits) but unique-
+        # page reach far beyond the 512-entry shared L2 TLB
+        ws = int(j(16384, 65536))
+        hot, hot_m, seq_m, rev = 16, 50, 900, int(j(16, 32))
+        warm, warm_m = 64, 40
+    elif (l1c, l2c) == ("high", "low"):
+        # scattered (no spatial reuse) within a modest set: misses the
+        # 64-entry L1, fits the shared L2 TLB when running alone
+        ws = int(j(160, 300))
+        hot, hot_m, seq_m, rev = 8, 80, 80, 1
+        warm, warm_m = ws, 520
+    else:  # high, high
+        # warm tier sized so its per-page re-touch interval falls BETWEEN
+        # the baseline eviction horizon (fills from every warp -> thrash,
+        # especially with a co-runner) and the token-restricted horizon
+        # (fills from ~1/4 of warps -> resident). This is precisely the
+        # regime TLB-Fill Tokens exploit. GB-scale cold reach sends leaf
+        # PTE lines to DRAM.
+        ws = int(j(16384, 65536))
+        hot, hot_m = 64, int(j(100, 160))
+        warm, warm_m = int(j(224, 384)), int(j(360, 440))
+        seq_m, rev = int(j(120, 220)), int(j(1, 3))
+    return AppParams(
+        name=name,
+        ws_pages=ws,
+        hot_pages=max(hot, 1),
+        hot_milli=hot_m,
+        warm_pages=max(warm, 1),
+        warm_milli=warm_m,
+        seq_milli=seq_m,
+        stride=1,
+        gap=int(j(6, 28)),
+        l1d_hit_milli=int(j(350, 800)),
+        revisit=max(rev, 1),
+    )
+
+
+def app_matrix(names) -> np.ndarray:
+    """(n_apps, N_FIELDS) int32 parameter matrix."""
+    return np.stack([make_app(n).as_array() for n in names])
+
+
+def gen_vpn(params_row, app_id, warp_id, pos, t):
+    """Deterministic VPN for one access. All args traced int32 arrays.
+
+    params_row: (N_FIELDS,) int32 for this app; t: scalar sim time.
+    """
+    (ws, hot, hot_m, warm, warm_m, seq_m, stride, gap, _, rev) = [
+        params_row[..., i] for i in range(10)]
+    # page index advances every `rev` accesses (intra-page spatial locality);
+    # the stream selector is drawn per page-epoch so revisits return to the
+    # SAME page.
+    pg = pos // jnp.maximum(rev, 1)
+    r = _mix(pg.astype(jnp.uint32) * jnp.uint32(2654435761)
+             + warp_id.astype(jnp.uint32) * jnp.uint32(40503)
+             + app_id.astype(jnp.uint32))
+    sel = (r % jnp.uint32(1024)).astype(jnp.int32)
+    r2 = _mix(r + jnp.uint32(0x9E3779B9))
+    # zipf-ish skew within the hot set (nested modulus ≈ 1/rank weights):
+    # a handful of pages dominate — what the 32-entry bypass cache catches
+    hot_span = jnp.uint32(1) + (_mix(r2) % hot.astype(jnp.uint32))
+    hot_vpn = (r2 % hot_span).astype(jnp.int32)
+    group = warp_id // 8
+    warm_vpn = hot + (r2 % warm.astype(jnp.uint32)).astype(jnp.int32)
+    warm_hi = hot + warm
+    # the sequential stream is TIME-based and shared app-wide (a kernel
+    # sweeping an array): every warp touching it in the same window lands
+    # on the SAME page -> concurrent same-page misses merge in the walker
+    # and stall many warps at once (the paper's Fig. 4/5 pile-ups)
+    seq_vpn = warm_hi + ((t // 64) * stride + group % 4) % ws
+    rnd_vpn = warm_hi + (r2 % ws.astype(jnp.uint32)).astype(jnp.int32)
+    vpn = jnp.where(
+        sel < hot_m, hot_vpn,
+        jnp.where(sel < hot_m + warm_m, warm_vpn,
+                  jnp.where(sel < hot_m + warm_m + seq_m, seq_vpn, rnd_vpn)))
+    # per-app base offset keeps address spaces visibly disjoint even before
+    # ASID tagging (ASIDs are what actually isolates them)
+    return vpn + app_id * (1 << 22)
+
+
+def pair_workloads(seed: int = 7, n_pairs: int = 35) -> List[Tuple[str, str]]:
+    """35 random pairs avoiding low-low apps (paper §6)."""
+    rng = np.random.RandomState(seed)
+    eligible = [b for b in BENCHES if CATEGORY[b] != ("low", "low")]
+    pairs = set()
+    out = []
+    while len(out) < n_pairs:
+        a, b = rng.choice(eligible, 2, replace=False)
+        if (a, b) in pairs or (b, a) in pairs:
+            continue
+        pairs.add((a, b))
+        out.append((a, b))
+    return out
+
+
+def hmr_class(pair: Tuple[str, str]) -> int:
+    """0/1/2 HMR: count of high-L1,high-L2 apps in the bundle."""
+    return sum(1 for b in pair if CATEGORY[b] == ("high", "high"))

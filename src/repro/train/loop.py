@@ -1,0 +1,75 @@
+"""Training loop: jitted step + checkpoint/restart + straggler policy."""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.configs.base import ModelConfig, RunConfig
+from repro.data.pipeline import DataConfig, DataPipeline
+from repro.distributed.fault_tolerance import (
+    BoundedDispatcher, StragglerAbort, StragglerPolicy, resume_or_init)
+from repro.models import model as M
+from repro.train import optimizer as opt_mod
+from repro.train.step import build_train_step
+
+
+@dataclasses.dataclass
+class TrainConfig:
+    steps: int = 100
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 50
+    log_every: int = 10
+    seed: int = 0
+    opt: opt_mod.OptConfig = dataclasses.field(default_factory=opt_mod.OptConfig)
+
+
+def train(cfg: ModelConfig, run: RunConfig, tcfg: TrainConfig,
+          constrain=None, log: Callable[[str], None] = print) -> Dict:
+    """Single-host reference loop (the multi-pod path jits the same step
+    under the production mesh via launch/train.py)."""
+    step_fn = jax.jit(build_train_step(cfg, run, tcfg.opt, constrain),
+                      donate_argnums=(0, 1))
+    pipe = DataPipeline(cfg, run.shape, DataConfig(seed=tcfg.seed))
+    straggler = StragglerPolicy()
+    dispatcher = BoundedDispatcher()
+
+    def init_fn():
+        params = M.init_params(jax.random.PRNGKey(tcfg.seed), cfg)
+        return params, opt_mod.init(params, tcfg.opt)
+
+    ckpt = Checkpointer(tcfg.ckpt_dir) if tcfg.ckpt_dir else None
+    if ckpt:
+        params, opt_state, start = resume_or_init(ckpt, init_fn)
+    else:
+        params, opt_state = init_fn()
+        start = 0
+
+    history = []
+    for step, batch in pipe.iterate(start, tcfg.steps):
+        jb = {k: jnp.asarray(v) for k, v in batch.items()}
+        t0 = time.time()
+        params, opt_state, metrics = step_fn(params, opt_state, jb)
+        dispatcher.dispatch(metrics)
+        dt = time.time() - t0
+        if straggler.record(dt):
+            log(f"[straggler] step {step} took {dt:.2f}s "
+                f"(median {straggler.median():.2f}s)")
+        if step % tcfg.log_every == 0:
+            m = {k: float(v) for k, v in metrics.items()}
+            history.append({"step": step, **m})
+            log(f"step {step}: loss={m.get('loss', float('nan')):.4f}")
+        if ckpt and step > start and step % tcfg.ckpt_every == 0:
+            dispatcher.drain()
+            ckpt.save(step, params, opt_state,
+                      extra={"next_step": step + 1}, blocking=False)
+    dispatcher.drain()
+    if ckpt:
+        ckpt.save(tcfg.steps, params, opt_state,
+                  extra={"next_step": tcfg.steps}, blocking=True)
+    return {"params": params, "opt_state": opt_state, "history": history}

@@ -1,0 +1,199 @@
+"""Optimizers (no external deps): AdamW with optional bf16 moments, and
+Adafactor for memory-constrained giants. Moment trees shard exactly like the
+params they track (elementwise updates preserve GSPMD sharding)."""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    name: str = "adamw"          # adamw | adafactor
+    lr: float = 3e-4
+    beta1: float = 0.9
+    beta2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    bf16_moments: bool = False
+    warmup_steps: int = 100
+    # serialize per-leaf updates with optimization barriers: without this
+    # XLA holds the fp32 update temps of EVERY stacked weight concurrently
+    # (tens of GB for 398B-class models); with it, peak = one leaf's temps
+    sequential_updates: bool = True
+
+
+def lr_schedule(cfg: OptConfig, step):
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    return cfg.lr * warm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def adamw_init(params, cfg: OptConfig):
+    mdt = jnp.bfloat16 if cfg.bf16_moments else jnp.float32
+
+    def zeros_like(p):
+        return jnp.zeros(p.shape, mdt)
+
+    return {
+        "m": jax.tree_util.tree_map(zeros_like, params),
+        "v": jax.tree_util.tree_map(zeros_like, params),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def _global_norm(tree):
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
+                        for l in leaves))
+
+
+def adamw_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    gnorm = _global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9))
+    lr = lr_schedule(cfg, step)
+    b1, b2 = cfg.beta1, cfg.beta2
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, m, v):
+        gf = g.astype(jnp.float32) * scale
+        mf = m.astype(jnp.float32) * b1 + gf * (1 - b1)
+        vf = v.astype(jnp.float32) * b2 + jnp.square(gf) * (1 - b2)
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        u = u + cfg.weight_decay * p.astype(jnp.float32)
+        p_new = p.astype(jnp.float32) - lr * u
+        return p_new.astype(p.dtype), mf.astype(m.dtype), vf.astype(v.dtype)
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state["m"])
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = []
+    token = None
+    for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v):
+        if cfg.sequential_updates and token is not None:
+            p, g, m, v, _ = jax.lax.optimization_barrier((p, g, m, v, token))
+        res = upd(p, g, m, v)
+        token = res[0]
+        out.append(res)
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+    metrics = {"grad_norm": gnorm, "lr": lr}
+    return new_p, {"m": new_m, "v": new_v, "step": step}, metrics
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moment; rank>=2 leaves factored)
+# ---------------------------------------------------------------------------
+
+def adafactor_init(params, cfg: OptConfig):
+    def factored(p):
+        if p.ndim >= 2:
+            return {
+                "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+            }
+        return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+    return {
+        "v": jax.tree_util.tree_map(factored, params,
+                                    is_leaf=lambda x: hasattr(x, "ndim")),
+        "step": jnp.zeros((), jnp.int32),
+    }
+
+
+def adafactor_update(params, grads, state, cfg: OptConfig):
+    step = state["step"] + 1
+    lr = lr_schedule(cfg, step)
+    decay = 1.0 - step.astype(jnp.float32) ** -0.8
+
+    def upd(p, g, v):
+        gf = g.astype(jnp.float32)
+        g2 = jnp.square(gf) + 1e-30
+        if p.ndim >= 2:
+            vr = v["vr"] * decay + jnp.mean(g2, axis=-1) * (1 - decay)
+            vc = v["vc"] * decay + jnp.mean(g2, axis=-2) * (1 - decay)
+            denom = (vr[..., None] * vc[..., None, :]
+                     / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True),
+                                   1e-30)[..., None])
+            u = gf * jax.lax.rsqrt(denom + 1e-30)
+            nv = {"vr": vr, "vc": vc}
+        else:
+            nv = {"v": v["v"] * decay + g2 * (1 - decay)}
+            u = gf * jax.lax.rsqrt(nv["v"] + 1e-30)
+        # update clipping (RMS <= 1)
+        rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+        u = u / jnp.maximum(1.0, rms)
+        p_new = p.astype(jnp.float32) - lr * (u + cfg.weight_decay * p)
+        return p_new.astype(p.dtype), nv
+
+    flat_p, treedef = jax.tree_util.tree_flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_v = treedef.flatten_up_to(state["v"])
+    out = []
+    token = None
+    for p, g, v in zip(flat_p, flat_g, flat_v):
+        if cfg.sequential_updates and token is not None:
+            p, g, _ = jax.lax.optimization_barrier((p, g, token))
+        res = upd(p, g, v)
+        token = res[0]
+        out.append(res)
+    new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+    new_v = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+    return new_p, {"v": new_v, "step": step}, {"lr": lr}
+
+
+def init(params, cfg: OptConfig):
+    return (adafactor_init if cfg.name == "adafactor" else adamw_init)(params, cfg)
+
+
+def update(params, grads, state, cfg: OptConfig):
+    fn = adafactor_update if cfg.name == "adafactor" else adamw_update
+    return fn(params, grads, state, cfg)
+
+
+def abstract_state(param_specs_tree, cfg: OptConfig, sharding_fn=None):
+    """ShapeDtypeStruct tree of optimizer state matching abstract params.
+
+    sharding_fn: Param -> NamedSharding (moments shard like their param).
+    """
+    from repro.models.params import Param, is_param, tree_map_params
+    import dataclasses as dc
+
+    def moment(p: Param, dtype):
+        q = dc.replace(p, dtype=dtype)
+        if sharding_fn is None:
+            return jax.ShapeDtypeStruct(q.shape, q.dtype)
+        return jax.ShapeDtypeStruct(q.shape, q.dtype, sharding=sharding_fn(q))
+
+    mdt = jnp.bfloat16 if cfg.bf16_moments else jnp.float32
+    if cfg.name == "adafactor":
+        def fac(p: Param):
+            if len(p.shape) >= 2:
+                vr = dc.replace(p, shape=p.shape[:-1], axes=p.axes[:-1],
+                                dtype=jnp.float32)
+                vc = dc.replace(p, shape=p.shape[:-2] + p.shape[-1:],
+                                axes=p.axes[:-2] + p.axes[-1:],
+                                dtype=jnp.float32)
+                return {"vr": moment(vr, jnp.float32),
+                        "vc": moment(vc, jnp.float32)}
+            return {"v": moment(dc.replace(p, dtype=jnp.float32), jnp.float32)}
+
+        return {"v": tree_map_params(fac, param_specs_tree),
+                "step": jax.ShapeDtypeStruct((), jnp.int32)}
+
+    return {
+        "m": tree_map_params(lambda p: moment(p, mdt), param_specs_tree),
+        "v": tree_map_params(lambda p: moment(p, mdt), param_specs_tree),
+        "step": jax.ShapeDtypeStruct((), jnp.int32),
+    }

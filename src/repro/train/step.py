@@ -1,0 +1,100 @@
+"""jit-able step builders: train_step (grad-accum + optimizer), prefill_step,
+decode_step. These are what the launcher jits and the dry-run lowers."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, RunConfig
+from repro.models import model as M
+from repro.models.losses import cross_entropy
+from repro.train import optimizer as opt_mod
+
+AUX_WEIGHT = 1e-2
+
+
+def _loss_mask(cfg: ModelConfig, labels):
+    if cfg.n_patches:
+        pos = jnp.arange(labels.shape[1])[None, :]
+        return (pos >= cfg.n_patches).astype(jnp.float32)
+    return None
+
+
+def build_loss_fn(cfg: ModelConfig, run: RunConfig, constrain=None):
+    constrain = constrain or (lambda x, axes: x)
+
+    def loss_fn(params, batch):
+        logits, aux = M.forward_train(cfg, run, params, batch, constrain)
+        loss, metrics = cross_entropy(logits, batch["labels"],
+                                      _loss_mask(cfg, batch["labels"]),
+                                      real_vocab=cfg.vocab_size)
+        total = loss + AUX_WEIGHT * aux
+        metrics = dict(metrics, aux=aux)
+        return total, metrics
+
+    return loss_fn
+
+
+def build_train_step(cfg: ModelConfig, run: RunConfig, opt_cfg: opt_mod.OptConfig,
+                     constrain=None):
+    """Returns train_step(params, opt_state, batch, rng) -> (params, opt_state,
+    metrics). Grad accumulation over run.microbatches via lax.scan."""
+    loss_fn = build_loss_fn(cfg, run, constrain)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+    M_ = run.microbatches
+    acc_dt = jnp.bfloat16 if run.bf16_moments else jnp.float32
+
+    def split_micro(x):
+        return x.reshape((M_, x.shape[0] // M_) + x.shape[1:])
+
+    def train_step(params, opt_state, batch):
+        if M_ == 1:
+            (loss, metrics), grads = grad_fn(params, batch)
+        else:
+            micro = jax.tree_util.tree_map(split_micro, batch)
+
+            def body(acc, mb):
+                g_acc, l_acc = acc
+                (l, _), g = grad_fn(params, mb)
+                g_acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(acc_dt), g_acc, g)
+                return (g_acc, l_acc + l), None
+
+            g0 = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, acc_dt), params)
+            (grads, loss_sum), _ = jax.lax.scan(body, (g0, 0.0), micro)
+            grads = jax.tree_util.tree_map(lambda g: g / M_, grads)
+            loss = loss_sum / M_
+            metrics = {"loss": loss}
+        params, opt_state, opt_metrics = opt_mod.update(
+            params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, **opt_metrics)
+        metrics = {k: v.astype(jnp.float32) if hasattr(v, "astype") else v
+                   for k, v in metrics.items()}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def build_prefill_step(cfg: ModelConfig, run: RunConfig, max_len: int,
+                       constrain=None):
+    constrain = constrain or (lambda x, axes: x)
+
+    def prefill_step(params, batch):
+        return M.forward_prefill(cfg, run, params, batch, max_len, constrain)
+
+    return prefill_step
+
+
+def build_decode_step(cfg: ModelConfig, run: RunConfig, constrain=None):
+    constrain = constrain or (lambda x, axes: x)
+
+    def decode_step(params, caches, batch):
+        logits, new_caches = M.forward_decode(
+            cfg, run, params, batch, caches, constrain=constrain)
+        return logits, new_caches
+
+    return decode_step

@@ -1,0 +1,9 @@
+import os
+
+# smoke tests and benches must see the real (single) device — the 512-device
+# override belongs ONLY to the dry-run (see launch/dryrun.py)
+assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+
+
+def pytest_configure(config):
+    config.addinivalue_line("markers", "slow: long-running integration test")

@@ -1,0 +1,85 @@
+"""Config sanity: exact assigned hyper-parameters + published param counts."""
+import pytest
+
+from repro.configs import ARCHS, all_cells, get_model, get_run_config, reduced_model
+from repro.configs.shapes import ALL_SHAPES
+
+EXPECTED = {
+    # name: (total params, rel tolerance)
+    "llama3-8b": (8.0e9, 0.06),
+    "mistral-large-123b": (123e9, 0.06),
+    "glm4-9b": (9.4e9, 0.10),
+    "qwen3-4b": (4.0e9, 0.25),       # explicit head_dim inflates attn a bit
+    "phi-3-vision-4.2b": (4.2e9, 0.12),
+    "mamba2-1.3b": (1.3e9, 0.15),
+    "olmoe-1b-7b": (6.9e9, 0.10),
+    "mixtral-8x22b": (141e9, 0.10),
+    "jamba-1.5-large-398b": (398e9, 0.12),
+    "whisper-base": (72e6, 0.30),
+}
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_param_counts(arch):
+    target, tol = EXPECTED[arch]
+    n = ARCHS[arch].param_count()
+    assert abs(n - target) / target < tol, f"{arch}: {n/1e9:.2f}B vs {target/1e9}B"
+
+
+def test_active_params_moe():
+    jamba = get_model("jamba-1.5-large-398b")
+    active = jamba.param_count(active_only=True)
+    assert 70e9 < active < 110e9  # ~94B active
+    olmoe = get_model("olmoe-1b-7b")
+    assert 0.9e9 < olmoe.param_count(active_only=True) < 1.8e9
+
+
+def test_40_cells():
+    cells = list(all_cells())
+    assert len(cells) == 40
+    skipped = [(a, s) for a, s, ok in cells if not ok]
+    # long_500k skipped exactly for the 7 pure-full-attention archs
+    assert len(skipped) == 7
+    assert all(s == "long_500k" for _, s in skipped)
+    runnable_500k = {a for a, s, ok in cells if s == "long_500k" and ok}
+    assert runnable_500k == {"mamba2-1.3b", "jamba-1.5-large-398b",
+                             "mixtral-8x22b"}
+
+
+def test_exact_assigned_values():
+    m = get_model("mistral-large-123b")
+    assert (m.n_layers, m.d_model, m.n_heads, m.n_kv_heads, m.d_ff,
+            m.vocab_size) == (88, 12288, 96, 8, 28672, 32768)
+    g = get_model("glm4-9b")
+    assert (g.n_kv_heads, g.vocab_size) == (2, 151552)
+    j = get_model("jamba-1.5-large-398b")
+    assert (j.attn_every, j.n_experts, j.top_k) == (8, 16, 2)
+    x = get_model("mixtral-8x22b")
+    assert (x.sliding_window, x.n_experts, x.top_k) == (4096, 8, 2)
+    q = get_model("qwen3-4b")
+    assert q.qk_norm and q.head_dim == 128
+    w = get_model("whisper-base")
+    assert w.n_enc_layers == 6 and w.is_enc_dec
+
+
+def test_reduced_models_preserve_structure():
+    for arch, cfg in ARCHS.items():
+        r = reduced_model(cfg)
+        assert r.family == cfg.family
+        assert r.is_moe == cfg.is_moe
+        assert r.is_hybrid == cfg.is_hybrid
+        assert r.is_enc_dec == cfg.is_enc_dec
+        if cfg.n_heads:
+            assert (r.n_heads // max(r.n_kv_heads, 1)
+                    == min(cfg.n_heads // max(cfg.n_kv_heads, 1), 4))
+
+
+def test_run_config_rejects_skipped_cell():
+    with pytest.raises(ValueError):
+        get_run_config("llama3-8b", "long_500k")
+
+
+def test_padded_vocab():
+    for cfg in ARCHS.values():
+        assert cfg.padded_vocab % 128 == 0
+        assert 0 <= cfg.padded_vocab - cfg.vocab_size < 128

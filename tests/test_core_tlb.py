@@ -1,0 +1,175 @@
+"""TLB / tokens / bypass / page-table unit + hypothesis property tests."""
+import hypothesis
+import hypothesis.strategies as st
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.core import bypass as bp_mod
+from repro.core import page_table as pt
+from repro.core import tlb as tlb_mod
+from repro.core import tokens as tok_mod
+
+
+# ------------------------------------------------------------------ TLB
+
+def test_fill_then_probe_hits():
+    st_ = tlb_mod.init(64, 64)  # fully associative: one set
+    vpn = jnp.asarray([5, 9, 13], jnp.int32)
+    asid = jnp.asarray([0, 1, 0], jnp.int32)
+    act = jnp.ones(3, bool)
+    # FA cache has one fill port in this model: fill sequentially
+    for i in range(3):
+        st_ = tlb_mod.fill(st_, vpn[i:i + 1], asid[i:i + 1],
+                           act[i:i + 1], i + 1)
+    st_, hit = tlb_mod.probe(st_, vpn, asid, act, 5)
+    assert bool(hit.all())
+
+
+def test_asid_isolation():
+    st_ = tlb_mod.init(64, 64)
+    vpn = jnp.asarray([42], jnp.int32)
+    st_ = tlb_mod.fill(st_, vpn, jnp.asarray([0]), jnp.asarray([True]), 1)
+    _, hit_same = tlb_mod.probe(st_, vpn, jnp.asarray([0]),
+                                jnp.asarray([True]), 2)
+    _, hit_other = tlb_mod.probe(st_, vpn, jnp.asarray([1]),
+                                 jnp.asarray([True]), 2)
+    assert bool(hit_same[0]) and not bool(hit_other[0])
+
+
+def test_flush_asid():
+    st_ = tlb_mod.init(16, 16)
+    vpns = jnp.arange(8, dtype=jnp.int32)
+    asids = jnp.asarray([0, 1] * 4, jnp.int32)
+    for i in range(8):  # FA structure: one fill per call
+        st_ = tlb_mod.fill(st_, vpns[i:i + 1], asids[i:i + 1],
+                           jnp.ones(1, bool), i + 1)
+    st_ = tlb_mod.flush_asid(st_, 0)
+    occ = tlb_mod.occupancy_by_asid(st_, 2)
+    assert int(occ[0]) == 0 and int(occ[1]) == 4
+
+
+def test_lru_eviction():
+    st_ = tlb_mod.init(4, 4)  # 1 set of 4 ways effectively per index
+    # fill 4 entries in set 0 (vpns multiples of 4 -> set 0 when sets=1)
+    st_ = tlb_mod.init(4, 4)
+    n_sets = st_.tags.shape[0]
+    vpns = jnp.asarray([0 * n_sets, 1 * n_sets, 2 * n_sets, 3 * n_sets],
+                       jnp.int32)
+    for i in range(4):
+        st_ = tlb_mod.fill(st_, vpns[i:i + 1], jnp.zeros(1, jnp.int32),
+                           jnp.ones(1, bool), i + 1)
+    # touch entry 0 (most recent), then fill a new one -> evicts vpn[1]
+    st_, _ = tlb_mod.probe(st_, vpns[:1], jnp.zeros(1, jnp.int32),
+                           jnp.ones(1, bool), 10)
+    st_ = tlb_mod.fill(st_, jnp.asarray([4 * n_sets], jnp.int32),
+                       jnp.zeros(1, jnp.int32), jnp.ones(1, bool), 11)
+    _, hit0 = tlb_mod.probe(st_, vpns[:1], jnp.zeros(1, jnp.int32),
+                            jnp.ones(1, bool), 12)
+    _, hit1 = tlb_mod.probe(st_, vpns[1:2], jnp.zeros(1, jnp.int32),
+                            jnp.ones(1, bool), 12)
+    assert bool(hit0[0]) and not bool(hit1[0])
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=16),
+       st.integers(0, 3))
+def test_tlb_property_fill_probe(vpns, asid):
+    st_ = tlb_mod.init(64, 16)
+    v = jnp.asarray(vpns, jnp.int32)
+    a = jnp.full((len(vpns),), asid, jnp.int32)
+    act = jnp.ones(len(vpns), bool)
+    st_ = tlb_mod.fill(st_, v, a, act, 1)
+    # at least the LAST filled instance of each distinct set survives
+    st_, hit = tlb_mod.probe(st_, v, a, act, 2)
+    # every distinct vpn whose set wasn't contended must hit
+    sets = [x % 4 for x in vpns]
+    for i, x in enumerate(vpns):
+        if sets.count(x % 4) == 1:
+            assert bool(hit[i]), (vpns, i)
+
+
+# ---------------------------------------------------------------- tokens
+
+def test_token_hill_climb_directions():
+    ts = tok_mod.init(2, jnp.asarray([100, 100]), 0.8)
+    assert tuple(np.asarray(ts.tokens)) == (80, 80)
+    # warm-up epoch installs baselines only
+    ts = ts._replace(epoch_hits=jnp.asarray([50, 50]),
+                     epoch_misses=jnp.asarray([50, 50]))
+    ts = tok_mod.epoch_update(ts, jnp.asarray([100, 100]))
+    assert tuple(np.asarray(ts.tokens)) == (80, 80)
+    # improving epoch: keep direction (down)
+    ts = ts._replace(epoch_hits=jnp.asarray([80, 20]),
+                     epoch_misses=jnp.asarray([20, 80]))
+    ts = tok_mod.epoch_update(ts, jnp.asarray([100, 100]))
+    tok = np.asarray(ts.tokens)
+    assert tok[0] < 80  # improved -> continue down
+    assert 1 <= tok.min() and tok.max() <= 100
+
+
+def test_token_bounds_bounce():
+    ts = tok_mod.init(1, jnp.asarray([10]), 0.1)
+    ts = ts._replace(first_epoch=jnp.array(False),
+                     direction=jnp.asarray([-1]),
+                     prev_miss_rate=jnp.asarray([0.9]),
+                     epoch_hits=jnp.asarray([90]),
+                     epoch_misses=jnp.asarray([10]))
+    for _ in range(5):
+        ts = tok_mod.epoch_update(ts, jnp.asarray([10]))
+        assert 1 <= int(ts.tokens[0]) <= 10
+
+
+# ---------------------------------------------------------------- bypass
+
+def test_bypass_epoch_latching_and_sampling():
+    bs = bp_mod.init()
+    # epoch 0 data: data hit rate 0.9; level-4 (leaf) rate 0.1
+    depth = jnp.asarray([0] * 50 + [4] * 50, jnp.int32)
+    hits = jnp.asarray([True] * 45 + [False] * 5 + [True] * 5 + [False] * 45)
+    bs = bp_mod.record(bs, depth, hits, jnp.ones(100, bool))
+    bs = bp_mod.epoch_update(bs)
+    fill = bp_mod.should_fill(bs, jnp.asarray([0, 1, 4], jnp.int32))
+    # epoch_idx == 1 -> not a sampling epoch; leaf must bypass, data fills
+    assert bool(fill[0]) and not bool(fill[2])
+    # advance to a sampling epoch: fills re-enabled
+    for _ in range(3):
+        bs = bp_mod.epoch_update(bs)
+    assert (int(bs.epoch_idx) % bp_mod.SAMPLE_EVERY) == 0
+    fill = bp_mod.should_fill(bs, jnp.asarray([4], jnp.int32))
+    assert bool(fill[0])
+
+
+# ------------------------------------------------------------ page table
+
+def test_translate_asid_disjoint():
+    cfg = pt.PageTableConfig()
+    vpn = jnp.arange(100, dtype=jnp.int32)
+    p0 = pt.translate(cfg, jnp.zeros(100, jnp.int32), vpn)
+    p1 = pt.translate(cfg, jnp.ones(100, jnp.int32), vpn)
+    assert not np.array_equal(np.asarray(p0), np.asarray(p1))
+    # deterministic
+    p0b = pt.translate(cfg, jnp.zeros(100, jnp.int32), vpn)
+    np.testing.assert_array_equal(np.asarray(p0), np.asarray(p0b))
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**20 - 1), st.integers(0, 2**20 - 1),
+       st.integers(0, 63))
+def test_pte_root_sharing_property(vpn_a, vpn_b, asid):
+    """Near-root PTE lines are shared by nearby VPNs; leaves diverge."""
+    cfg = pt.PageTableConfig()
+    la = np.asarray(pt.pte_line_addresses(cfg, jnp.int32(asid),
+                                          jnp.int32(vpn_a)))
+    lb = np.asarray(pt.pte_line_addresses(cfg, jnp.int32(asid),
+                                          jnp.int32(vpn_b)))
+    # level 0 covers 2^27+ pages per line -> always shared for 20-bit vpns
+    assert la[0] == lb[0]
+    if vpn_a // 16 == vpn_b // 16:
+        assert la[-1] == lb[-1]   # same leaf line
+
+
+def test_walk_depth_tags():
+    assert pt.walk_depth_tag(0) == 1
+    assert pt.walk_depth_tag(3) == 4
+    assert pt.walk_depth_tag(9) == 7  # saturates at 7 (3-bit tag)

@@ -1,0 +1,95 @@
+"""Required per-arch smoke tests: reduced config, one forward/train step on
+CPU, output shapes + finite values; plus decode-vs-teacher-forcing
+equivalence (the strongest end-to-end correctness check)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, reduced_model
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.losses import cross_entropy
+from repro.train import optimizer as opt_mod
+from repro.train.step import build_train_step
+
+
+def _mk(arch, seq=32, batch=2, fp32=False):
+    cfg = reduced_model(ARCHS[arch])
+    shape = ShapeConfig("t", seq_len=seq, global_batch=batch, kind="train")
+    run = RunConfig(model=cfg, shape=shape, remat=False,
+                    attn_block_q=16, attn_block_k=16)
+    if fp32:
+        from repro.models import lm
+        from repro.models.params import materialize
+        params = materialize(jax.random.PRNGKey(0), lm.build_param_specs(cfg),
+                             dtype_override=jnp.float32)
+    else:
+        params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    batch_d = {"tokens": jnp.asarray(
+        rng.randint(0, cfg.vocab_size, (batch, seq - (cfg.n_patches or 0)))),
+        "labels": jnp.asarray(rng.randint(0, cfg.vocab_size, (batch, seq)))}
+    if cfg.n_patches:
+        batch_d["patch_embeds"] = jnp.asarray(
+            rng.randn(batch, cfg.n_patches, cfg.d_model) * .02, jnp.bfloat16)
+    if cfg.is_enc_dec:
+        batch_d["frames"] = jnp.asarray(
+            rng.randn(batch, cfg.enc_len, cfg.d_model) * .02, jnp.bfloat16)
+    return cfg, run, params, batch_d
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_forward_shapes_and_finite(arch):
+    cfg, run, params, batch = _mk(arch)
+    logits, aux = M.forward_train(cfg, run, params, batch)
+    assert logits.shape == (2, 32, cfg.padded_vocab)
+    lf = np.asarray(logits, np.float32)
+    assert np.all(np.isfinite(lf)), arch
+    loss, _ = cross_entropy(logits, batch["labels"], real_vocab=cfg.vocab_size)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", sorted(ARCHS))
+def test_one_train_step(arch):
+    cfg, run, params, batch = _mk(arch)
+    ocfg = opt_mod.OptConfig(lr=1e-3, warmup_steps=1)
+    step = build_train_step(cfg, run, ocfg)
+    opt_state = opt_mod.init(params, ocfg)
+    p2, o2, metrics = step(params, opt_state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    # params actually changed
+    l0 = jax.tree_util.tree_leaves(params)[0]
+    l1 = jax.tree_util.tree_leaves(p2)[0]
+    assert not np.allclose(np.asarray(l0, np.float32),
+                           np.asarray(l1, np.float32))
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "mamba2-1.3b",
+                                  "jamba-1.5-large-398b", "mixtral-8x22b",
+                                  "whisper-base"])
+def test_decode_matches_teacher_forcing(arch):
+    """Prefill + stepwise decode must reproduce the full-forward logits
+    (fp32 params: this is a logic-equivalence test, not a precision test)."""
+    cfg, run, params, batch = _mk(arch, seq=16, fp32=True)
+    pb = {k: (v.astype(jnp.float32) if v.dtype == jnp.bfloat16 else v)
+          for k, v in batch.items() if k != "labels"}
+    full_logits, _ = M.forward_train(cfg, run, params, pb)
+
+    prompt = 8
+    pre = dict(pb, tokens=pb["tokens"][:, :prompt])
+    logits, caches = M.forward_prefill(cfg, run, params, pre, max_len=64)
+    np.testing.assert_allclose(
+        np.asarray(logits[:, -1], np.float32),
+        np.asarray(full_logits[:, (cfg.n_patches or 0) + prompt - 1],
+                   np.float32), rtol=2e-3, atol=2e-3)
+
+    errs = []
+    for i in range(prompt, pb["tokens"].shape[1]):
+        tok = pb["tokens"][:, i:i + 1]
+        logits, caches = M.forward_decode(cfg, run, params, {"tokens": tok},
+                                          caches)
+        want = full_logits[:, (cfg.n_patches or 0) + i]
+        errs.append(float(jnp.max(jnp.abs(
+            logits[:, 0].astype(jnp.float32) - want.astype(jnp.float32)))))
+    assert max(errs) < 5e-3, (arch, errs)

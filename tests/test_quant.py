@@ -1,0 +1,52 @@
+"""Int8 weight-only serving path (§Perf C2)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import ARCHS, reduced_model
+from repro.configs.base import RunConfig, ShapeConfig
+from repro.models import model as M
+from repro.models.quant import dequant_tree, quantize_arrays
+
+
+def test_quantize_roundtrip_error_bounded():
+    rng = jax.random.PRNGKey(0)
+    w = jax.random.normal(rng, (3, 16, 24), jnp.float32).astype(jnp.bfloat16)
+    q = quantize_arrays({"w": w})["w"]
+    assert q["q"].dtype == jnp.int8
+    assert q["scale"].shape == (3, 24)
+    back = dequant_tree({"w": q})["w"].astype(jnp.float32)
+    err = np.abs(np.asarray(back) - np.asarray(w, np.float32))
+    scale = np.asarray(q["scale"])[:, None, :]
+    assert np.all(err <= scale * 1.01 + 1e-4)
+
+
+def test_int8_decode_close_to_bf16():
+    cfg = reduced_model(ARCHS["llama3-8b"])
+    shape = ShapeConfig("t", 16, 2, "decode")
+    run = RunConfig(model=cfg, shape=shape, remat=False,
+                    attn_block_q=16, attn_block_k=16)
+    runq = dataclasses.replace(run, quantize_weights=True)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.RandomState(0)
+    pb = {"tokens": jnp.asarray(rng.randint(0, cfg.vocab_size, (2, 8)))}
+    lg, caches = M.forward_prefill(cfg, run, params, pb, max_len=32)
+    tok = jnp.argmax(lg[:, -1], -1)[:, None]
+    ref, _ = M.forward_decode(cfg, run, params, {"tokens": tok}, caches)
+    pq = dict(params, blocks=quantize_arrays(params["blocks"]))
+    out, _ = M.forward_decode(cfg, runq, pq, {"tokens": tok}, caches)
+    rel = (float(jnp.max(jnp.abs(out.astype(jnp.float32)
+                                 - ref.astype(jnp.float32))))
+           / max(float(jnp.std(ref.astype(jnp.float32))), 1e-6))
+    assert rel < 0.1
+
+
+def test_abstract_quant_specs_shapes():
+    cfg = reduced_model(ARCHS["mistral-large-123b"])
+    specs = M.abstract_params(cfg, quantize=True)
+    leaves = jax.tree_util.tree_leaves(specs)
+    dtypes = {str(l.dtype) for l in leaves}
+    assert "int8" in dtypes          # quantized block weights
+    assert "bfloat16" in dtypes      # embed / lm head stay bf16

@@ -1,0 +1,66 @@
+"""Simulator invariants (short runs — the full sweep lives in benchmarks/)."""
+import numpy as np
+import pytest
+
+from repro.sim.runner import run_batch
+from repro.sim.workloads import (BENCHES, CATEGORY, app_matrix, hmr_class,
+                                 pair_workloads)
+
+CYCLES = 16_000
+
+
+@pytest.fixture(scope="module")
+def short_runs():
+    pairs = [("3DS", None), ("3DS", "BLK")]
+    out = {}
+    for d in ("ideal", "gpu-mmu", "mask"):
+        out[d] = run_batch(d, pairs, cycles=CYCLES)
+    return out
+
+
+def test_ideal_dominates(short_runs):
+    """No-translation-overhead IPC is an upper bound per workload."""
+    for i in range(2):
+        ideal = short_runs["ideal"][i]["ipc"][0]
+        for d in ("gpu-mmu", "mask"):
+            assert short_runs[d][i]["ipc"][0] <= ideal * 1.02
+
+
+def test_sharing_thrashes_shared_tlb(short_runs):
+    """Fig. 7: co-running inflates the shared-TLB miss rate."""
+    solo = short_runs["gpu-mmu"][0]["l2_hit_rate"][0]
+    pair = short_runs["gpu-mmu"][1]["l2_hit_rate"][0]
+    assert pair < solo
+
+
+def test_stats_finite(short_runs):
+    for d, runs in short_runs.items():
+        for s in runs:
+            for k, v in s.items():
+                arr = np.asarray(v, np.float64)
+                assert np.all(np.isfinite(arr)), (d, k)
+
+
+def test_tokens_bounded(short_runs):
+    toks = short_runs["mask"][1]["tokens"]
+    assert np.all(toks >= 1) and np.all(toks <= 480)
+
+
+def test_walks_happen_and_cost(short_runs):
+    s = short_runs["gpu-mmu"][1]
+    assert s["walks"][0] > 100
+    assert s["walk_lat"][0] > 30
+
+
+def test_pair_sampling():
+    pairs = pair_workloads()
+    assert len(pairs) == 35
+    assert all(CATEGORY[a] != ("low", "low") and CATEGORY[b] != ("low", "low")
+               for a, b in pairs)
+    assert {hmr_class(p) for p in pairs} <= {0, 1, 2}
+
+
+def test_app_matrix_shapes():
+    m = app_matrix(BENCHES)
+    assert m.shape == (27, 10)
+    assert m.min() >= 0
