@@ -54,6 +54,22 @@ class DesignPoint:
     static_partition: bool = False   # L2$/DRAM statically split per app
 
 
+def static_partition_index(index, n_resources: int, n_apps: int, app):
+    """Static resource partitioning (the `Static` design, §6): app `a` owns
+    a contiguous ~1/n_apps slice of an index space (L2 sets, DRAM channels).
+    Slice bounds are proportional ((a*n)//n_apps .. ((a+1)*n)//n_apps) so no
+    trailing resources are stranded when n_apps does not divide n_resources;
+    if there are fewer resources than apps the slice floor is one unit and
+    the result clips into range.
+
+    index/app may be traced arrays; n_resources/n_apps are static ints.
+    """
+    na = max(n_apps, 1)
+    start = (app * n_resources) // na
+    span = jnp.maximum((app + 1) * n_resources // na - start, 1)
+    return jnp.minimum(start + index % span, n_resources - 1)
+
+
 def design(name: str) -> DesignPoint:
     base_off = MaskConfig(tlb_tokens=False, l2_bypass=False, dram_sched=False)
     table = {

@@ -7,9 +7,11 @@ One structure covers the paper's three translation caches:
   * bypass cache     — 32-entry fully associative (MASK §5.2)
 
 State is a NamedTuple of arrays so a bank of TLBs (one per core) is just a
-leading axis + vmap. Fills are batched; when several requests map to the
-same set in one step, one fill wins per set (ports/fill-bandwidth model —
-the paper's L2 TLB has 2 ports per memory partition).
+leading axis + vmap — `init_bank` / `probe_bank` / `fill_bank` package that
+pattern for the simulator's per-core L1 TLBs. Fills are batched; when
+several requests map to the same set in one step, one fill wins per set
+(ports/fill-bandwidth model — the paper's L2 TLB has 2 ports per memory
+partition).
 """
 from __future__ import annotations
 
@@ -52,9 +54,10 @@ def probe(state: TLBState, vpn, asid, active, time) -> Tuple[TLBState, jax.Array
     hit = match.any(axis=1) & active
     way = jnp.argmax(match, axis=1)
 
-    # LRU touch for hits (scatter; last writer wins on duplicates — fine)
-    lru = state.lru.at[set_ix, way].set(
-        jnp.where(hit, time, state.lru[set_ix, way]))
+    # LRU touch for hits only: non-hit lanes are routed out of bounds and
+    # dropped, so they can never scatter a stale value over a hit's touch
+    touch_set = jnp.where(hit, set_ix, n_sets)
+    lru = state.lru.at[touch_set, way].set(time, mode="drop")
     hits = state.hits + hit.sum(dtype=jnp.int32)
     misses = state.misses + (active & ~hit).sum(dtype=jnp.int32)
     return state._replace(lru=lru, hits=hits, misses=misses), hit
@@ -76,13 +79,36 @@ def fill(state: TLBState, vpn, asid, do_fill, time) -> TLBState:
     do_fill = do_fill & ~same_earlier.any(axis=1)
 
     victim = jnp.argmin(state.lru[set_ix], axis=1)       # (N,)
-    tags = state.tags.at[set_ix, victim].set(
-        jnp.where(do_fill, vpn, state.tags[set_ix, victim]))
-    asids = state.asids.at[set_ix, victim].set(
-        jnp.where(do_fill, asid, state.asids[set_ix, victim]))
-    lru = state.lru.at[set_ix, victim].set(
-        jnp.where(do_fill, time, state.lru[set_ix, victim]))
+    # masked lanes are routed out of bounds and dropped — a plain masked
+    # scatter would write the stale old value back and could clobber the
+    # winning lane's fill on duplicate sets
+    fill_set = jnp.where(do_fill, set_ix, n_sets)
+    tags = state.tags.at[fill_set, victim].set(vpn, mode="drop")
+    asids = state.asids.at[fill_set, victim].set(asid, mode="drop")
+    lru = state.lru.at[fill_set, victim].set(time, mode="drop")
     return state._replace(tags=tags, asids=asids, lru=lru)
+
+
+def init_bank(n_banks: int, n_entries: int, n_ways: int) -> TLBState:
+    """A bank of identical TLBs: one TLBState with leading axis (n_banks,)."""
+    single = init(n_entries, n_ways)
+    return jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x[None], (n_banks,) + x.shape), single)
+
+
+def probe_bank(state: TLBState, vpn, asid, active, time
+               ) -> Tuple[TLBState, jax.Array]:
+    """Probe a bank of TLBs, one request per bank. vpn/asid/active: (B,)."""
+    fn = jax.vmap(lambda s, v, a, act: probe(s, v[None], a[None], act[None],
+                                             time))
+    state, hit = fn(state, vpn, asid, active)
+    return state, hit[:, 0]
+
+
+def fill_bank(state: TLBState, vpn, asid, do_fill, time) -> TLBState:
+    """Fill a bank of TLBs, one request per bank. vpn/asid/do_fill: (B,)."""
+    fn = jax.vmap(lambda s, v, a, d: fill(s, v[None], a[None], d[None], time))
+    return fn(state, vpn, asid, do_fill)
 
 
 def flush_asid(state: TLBState, asid: int) -> TLBState:
@@ -94,8 +120,12 @@ def flush_asid(state: TLBState, asid: int) -> TLBState:
 
 
 def occupancy_by_asid(state: TLBState, n_asids: int) -> jax.Array:
-    """(n_asids,) live-entry counts — used by fairness diagnostics."""
+    """(n_asids,) live-entry counts — used by fairness diagnostics.
+
+    One-hot sum over every entry axis; invalid entries (asid -1) one-hot
+    to all-zeros, so no explicit valid mask interplay is needed beyond
+    the tag check. Also works on banked states (extra leading axes).
+    """
     valid = state.tags >= 0
-    return jnp.stack([
-        (valid & (state.asids == a)).sum(dtype=jnp.int32)
-        for a in range(n_asids)])
+    oh = jax.nn.one_hot(state.asids, n_asids, dtype=jnp.int32)
+    return (oh * valid[..., None]).sum(axis=tuple(range(oh.ndim - 1)))

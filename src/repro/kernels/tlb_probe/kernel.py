@@ -40,8 +40,11 @@ def _kernel(tags_ref, asids_ref, lru_ref, vpn_ref, asid_ref, act_ref,
     hit = match.any(axis=1) & active
     way = jnp.argmax(match, axis=1).astype(jnp.int32)
 
-    # LRU touch on hit
-    lru = lru.at[set_ix, way].set(jnp.where(hit, t, lru[set_ix, way]))
+    # LRU touch on hit; non-hit lanes are routed out of bounds and dropped
+    # so they cannot scatter a stale value over a hit's touch (matches
+    # repro.core.tlb.probe)
+    touch_set = jnp.where(hit, set_ix, jnp.int32(n_sets))
+    lru = lru.at[touch_set, way].set(t, mode="drop")
 
     # fills: misses only; first active miss per set wins (fill-port model)
     want = active & ~hit
@@ -52,12 +55,11 @@ def _kernel(tags_ref, asids_ref, lru_ref, vpn_ref, asid_ref, act_ref,
     do_fill = want & ~same_earlier.any(axis=1)
 
     victim = jnp.argmin(lru[set_ix], axis=1).astype(jnp.int32)
-    tags = tags.at[set_ix, victim].set(
-        jnp.where(do_fill, vpn, tags[set_ix, victim]))
-    asids = asids.at[set_ix, victim].set(
-        jnp.where(do_fill, asid, asids[set_ix, victim]))
-    lru = lru.at[set_ix, victim].set(
-        jnp.where(do_fill, t, lru[set_ix, victim]))
+    # masked lanes dropped via out-of-bounds routing (matches core.tlb.fill)
+    fill_set = jnp.where(do_fill, set_ix, jnp.int32(n_sets))
+    tags = tags.at[fill_set, victim].set(vpn, mode="drop")
+    asids = asids.at[fill_set, victim].set(asid, mode="drop")
+    lru = lru.at[fill_set, victim].set(t, mode="drop")
 
     tags_out[...] = tags
     asids_out[...] = asids

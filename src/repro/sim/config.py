@@ -1,7 +1,14 @@
-"""Simulator configuration (paper Table 1, Maxwell-class)."""
+"""Simulator configuration (paper Table 1, Maxwell-class).
+
+`n_apps` is arbitrary (1 <= n_apps <= n_cores): cores are split between
+apps by the oracle partition of §6 (app a owns a contiguous core range),
+and the per-app core/warp counts exposed here are the single source of
+truth for the scheduler, token distribution, and stats attribution.
+"""
 from __future__ import annotations
 
 import dataclasses
+from typing import Tuple
 
 from repro.core.mask import DesignPoint, MaskConfig, design
 
@@ -29,6 +36,31 @@ class SimConfig:
     design: DesignPoint = dataclasses.field(
         default_factory=lambda: design("gpu-mmu"))
 
+    def __post_init__(self):
+        if not 1 <= self.n_apps <= self.n_cores:
+            raise ValueError(
+                f"n_apps must be in [1, n_cores={self.n_cores}], "
+                f"got {self.n_apps}")
+
     @property
     def total_warps(self) -> int:
         return self.n_cores * self.warps_per_core
+
+    @property
+    def app_of_core(self) -> Tuple[int, ...]:
+        """(n_cores,) oracle core split (§6): contiguous, near-equal ranges."""
+        return tuple((c * self.n_apps) // self.n_cores
+                     for c in range(self.n_cores))
+
+    @property
+    def cores_per_app(self) -> Tuple[int, ...]:
+        """(n_apps,) core counts under the oracle split."""
+        counts = [0] * self.n_apps
+        for a in self.app_of_core:
+            counts[a] += 1
+        return tuple(counts)
+
+    @property
+    def warps_per_app(self) -> Tuple[int, ...]:
+        """(n_apps,) warp counts — token budgets and IPC denominators."""
+        return tuple(c * self.warps_per_core for c in self.cores_per_app)

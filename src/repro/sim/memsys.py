@@ -1,13 +1,27 @@
-"""Vectorized memory-hierarchy simulator: one-cycle transition function.
+"""Vectorized memory-hierarchy simulator: a layered one-cycle pipeline.
 
-Per cycle: each shader core's scheduler (GTO-like: oldest-ready-first) picks
-one ready warp, which issues one memory instruction. The request flows
-through: per-core L1 TLB -> shared L2 TLB (+ bypass cache) -> page walker
-(4 dependent PTE accesses through the shared L2 data cache / DRAM) -> data
-access (L1D -> shared L2 -> DRAM). Warps stall until their latency resolves;
-concurrent walks to the same (ASID, VPN) merge MSHR-style (Fig. 4's
-multi-warp stalls). Every design point of the paper (ideal / PWC / GPU-MMU /
-Static / MASK±components) is this same function with different switches.
+The cycle transition is composed of pure stages, each with its own state /
+result NamedTuple so every layer is individually unit-testable:
+
+  warp_sched        -- per-core GTO-like pick (oldest-ready-first): one
+                       ready warp per core issues one memory instruction.
+  translation       -- per-core L1 TLB bank -> shared L2 TLB (+ bypass
+                       cache) -> page walk (4 dependent PTE accesses
+                       through the shared L2 data cache / DRAM), with
+                       MSHR-style merging of concurrent walks to the same
+                       (ASID, VPN) (Fig. 4's multi-warp stalls).
+  datapath          -- L1D -> shared L2 data cache -> DRAM for the
+                       translated access (DATA_WIDTH divergent lines).
+  accumulate_stats  -- per-app counters behind the paper's tables/figures.
+
+`step` is a thin composition of those stages plus warp retire and epoch
+maintenance. Every design point of the paper (ideal / PWC / GPU-MMU /
+Static / MASK±components) is this same pipeline with different switches,
+and `n_apps` is arbitrary — the paper's 2-app pairs are just N=2.
+
+All translation caches (L1 bank, L2 TLB, bypass cache, PWC, and the
+line-addressed L2 data cache) share `core/tlb.py`'s probe/fill machinery;
+the L1 bank is a vmapped TLBState with a leading (n_cores,) axis.
 
 All state lives in `SimState` arrays -> the whole run is one lax.scan.
 """
@@ -23,44 +37,51 @@ from repro.core import dram_sched
 from repro.core import page_table as pt_mod
 from repro.core import tlb as tlb_mod
 from repro.core import tokens as tok_mod
+from repro.core.mask import static_partition_index
 from repro.core.page_table import _mix
 from repro.sim.config import SimConfig
-from repro.sim.workloads import N_FIELDS, gen_vpn
+from repro.sim.workloads import FIELD, gen_vpn
 
 WALK_TABLE = 64          # concurrent page walks (Table 1)
+DATA_WIDTH = 4           # divergent cache lines per memory instruction
 BIG = jnp.int32(1 << 30)
 
 
-class SimState(NamedTuple):
-    t: jax.Array                 # () int32
-    stall_until: jax.Array       # (W,) int32
-    instr: jax.Array             # (W,) int64-ish float32 retired instructions
-    pos: jax.Array               # (W,) int32 stream position
-    l1_tags: jax.Array           # (cores, L1E) int32 vpn
-    l1_asid: jax.Array           # (cores, L1E) int32
-    l1_lru: jax.Array            # (cores, L1E) int32
+# ---------------------------------------------------------------------------
+# layered state
+# ---------------------------------------------------------------------------
+
+class TransState(NamedTuple):
+    """Translation layer: TLB hierarchy + in-flight page-walk table."""
+    l1: tlb_mod.TLBState         # per-core bank, leading axis (n_cores,)
     l2tlb: tlb_mod.TLBState
     bypass_tlb: tlb_mod.TLBState
     pwc: tlb_mod.TLBState        # page-walk cache (PTE lines)
-    l2c: tlb_mod.TLBState        # shared L2 data cache (line-addressed)
-    tokens: tok_mod.TokenState
-    bypass: bp_mod.BypassState
-    dram: dram_sched.DramState
     walk_vpn: jax.Array          # (WALK_TABLE,) int32
-    walk_asid: jax.Array         # (WALK_TABLE,)
+    walk_asid: jax.Array         # (WALK_TABLE,) int32
     walk_done: jax.Array         # (WALK_TABLE,) int32 completion time
     walk_merged: jax.Array       # (WALK_TABLE,) int32 warps merged onto walk
-    # statistics
-    s_l1_hit: jax.Array          # (n_apps,)
+
+
+class DataState(NamedTuple):
+    """Shared data path: L2 data cache, DRAM, bypass accounting."""
+    l2c: tlb_mod.TLBState        # line-addressed, reuses TLB machinery
+    dram: dram_sched.DramState
+    bypass: bp_mod.BypassState
+
+
+class StatState(NamedTuple):
+    """Per-app cumulative counters (all (n_apps,) unless noted)."""
+    s_l1_hit: jax.Array
     s_l1_miss: jax.Array
     s_l2_hit: jax.Array
     s_l2_miss: jax.Array
     s_byp_hit: jax.Array         # bypass-cache hits
     s_byp_probe: jax.Array       # bypass-cache probes
-    s_walk_lat: jax.Array        # (n_apps,) float32 summed walk latency
-    s_walks: jax.Array           # (n_apps,)
+    s_walk_lat: jax.Array        # float32 summed walk latency
+    s_walks: jax.Array
     s_stall_per_miss: jax.Array  # accumulated merged-warp counts
-    s_dram_tlb_lat: jax.Array    # (n_apps,) float32
+    s_dram_tlb_lat: jax.Array    # float32
     s_dram_tlb_n: jax.Array
     s_dram_data_lat: jax.Array
     s_dram_data_n: jax.Array
@@ -70,33 +91,46 @@ class SimState(NamedTuple):
     s_l2c_data_probe: jax.Array
 
 
-def init_state(cfg: SimConfig) -> SimState:
-    W = cfg.total_warps
+class SimState(NamedTuple):
+    t: jax.Array                 # () int32
+    stall_until: jax.Array       # (W,) int32
+    instr: jax.Array             # (W,) float32 retired instructions
+    pos: jax.Array               # (W,) int32 stream position
+    trans: TransState
+    data: DataState
+    tokens: tok_mod.TokenState
+    stats: StatState
+
+
+def init_trans(cfg: SimConfig) -> TransState:
     m = cfg.design.mask
-    na = cfg.n_apps
     z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
-    zf = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
-    warps_per_app = jnp.full((na,), W // na, jnp.int32)
-    return SimState(
-        t=jnp.zeros((), jnp.int32),
-        stall_until=z(W),
-        instr=zf(W),
-        pos=z(W),
-        l1_tags=jnp.full((cfg.n_cores, m.l1_tlb_entries), -1, jnp.int32),
-        l1_asid=jnp.full((cfg.n_cores, m.l1_tlb_entries), -1, jnp.int32),
-        l1_lru=z(cfg.n_cores, m.l1_tlb_entries),
+    return TransState(
+        l1=tlb_mod.init_bank(cfg.n_cores, m.l1_tlb_entries, m.l1_tlb_entries),
         l2tlb=tlb_mod.init(m.l2_tlb_entries, m.l2_tlb_ways),
         bypass_tlb=tlb_mod.init(m.bypass_cache_entries,
                                 m.bypass_cache_entries),
         pwc=tlb_mod.init(cfg.pwc_entries, cfg.pwc_ways),
-        l2c=tlb_mod.init(cfg.l2_sets * cfg.l2_ways, cfg.l2_ways),
-        tokens=tok_mod.init(na, warps_per_app, m.initial_token_frac),
-        bypass=bp_mod.init(),
-        dram=dram_sched.init(cfg.n_channels, cfg.n_banks, na),
         walk_vpn=jnp.full((WALK_TABLE,), -1, jnp.int32),
         walk_asid=jnp.full((WALK_TABLE,), -1, jnp.int32),
         walk_done=z(WALK_TABLE),
         walk_merged=z(WALK_TABLE),
+    )
+
+
+def init_data(cfg: SimConfig) -> DataState:
+    return DataState(
+        l2c=tlb_mod.init(cfg.l2_sets * cfg.l2_ways, cfg.l2_ways),
+        dram=dram_sched.init(cfg.n_channels, cfg.n_banks, cfg.n_apps),
+        bypass=bp_mod.init(),
+    )
+
+
+def init_stats(n_apps: int) -> StatState:
+    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
+    zf = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
+    na = n_apps
+    return StatState(
         s_l1_hit=z(na), s_l1_miss=z(na), s_l2_hit=z(na), s_l2_miss=z(na),
         s_byp_hit=z(na), s_byp_probe=z(na),
         s_walk_lat=zf(na), s_walks=z(na), s_stall_per_miss=zf(na),
@@ -107,104 +141,131 @@ def init_state(cfg: SimConfig) -> SimState:
     )
 
 
+def init_state(cfg: SimConfig) -> SimState:
+    W = cfg.total_warps
+    return SimState(
+        t=jnp.zeros((), jnp.int32),
+        stall_until=jnp.zeros((W,), jnp.int32),
+        instr=jnp.zeros((W,), jnp.float32),
+        pos=jnp.zeros((W,), jnp.int32),
+        trans=init_trans(cfg),
+        data=init_data(cfg),
+        tokens=tok_mod.init(cfg.n_apps,
+                            jnp.asarray(cfg.warps_per_app, jnp.int32),
+                            cfg.design.mask.initial_token_frac),
+        stats=init_stats(cfg.n_apps),
+    )
+
+
 # ---------------------------------------------------------------------------
-# helpers
+# stage 1: warp scheduling
 # ---------------------------------------------------------------------------
 
-def _per_core_l1_probe(tags, asids, lru, vpn, asid, t):
-    """FA L1 TLB probe+LRU for one request per core. tags: (C, E)."""
-    match = (tags == vpn[:, None]) & (asids == asid[:, None])
-    hit = match.any(axis=1)
-    way = jnp.argmax(match, axis=1)
-    cidx = jnp.arange(tags.shape[0])
-    lru = lru.at[cidx, way].set(jnp.where(hit, t, lru[cidx, way]))
-    return hit, lru
+class SchedOut(NamedTuple):
+    """One candidate memory instruction per core, all arrays (n_cores,)."""
+    picked_warp: jax.Array       # global warp id
+    slot: jax.Array              # warp slot within its core
+    active: jax.Array            # bool: core found a ready warp
+    app: jax.Array
+    asid: jax.Array
+    vpn: jax.Array
+    pos: jax.Array               # stream position of the picked warp
 
 
-def _per_core_l1_fill(tags, asids, lru, vpn, asid, do_fill, t):
-    victim = jnp.argmin(lru, axis=1)
-    cidx = jnp.arange(tags.shape[0])
-    sel = lambda new, old: jnp.where(do_fill, new, old)  # noqa: E731
-    tags = tags.at[cidx, victim].set(sel(vpn, tags[cidx, victim]))
-    asids = asids.at[cidx, victim].set(sel(asid, asids[cidx, victim]))
-    lru = lru.at[cidx, victim].set(sel(t, lru[cidx, victim]))
-    return tags, asids, lru
+def warp_sched(cfg: SimConfig, params_mat, stall_until, pos, t) -> SchedOut:
+    """GTO-like pick: per core, the ready warp that has waited longest."""
+    C, wpc = cfg.n_cores, cfg.warps_per_core
+    ready = stall_until <= t
+    waiting = jnp.where(ready, t - stall_until, -1)
+    wait_grid = waiting.reshape(C, wpc)
+    pick = jnp.argmax(wait_grid, axis=1)                  # (C,)
+    picked_warp = jnp.arange(C) * wpc + pick
+    active = wait_grid[jnp.arange(C), pick] >= 0          # (C,)
+
+    app = jnp.asarray(cfg.app_of_core, jnp.int32)         # oracle split (§6)
+    p = pos[picked_warp]
+    vpn = gen_vpn(params_mat[app], app, picked_warp, p, t)
+    # one address space per application
+    return SchedOut(picked_warp=picked_warp, slot=pick, active=active,
+                    app=app, asid=app, vpn=vpn, pos=p)
 
 
-def _l2_cache_access(cfg: SimConfig, l2c, dram, line, app, is_tlb, depth_tag,
+# ---------------------------------------------------------------------------
+# shared L2 data cache + DRAM (used by both translation and datapath)
+# ---------------------------------------------------------------------------
+
+def _l2_cache_access(cfg: SimConfig, l2c, dram, line, app, is_tlb,
                      may_fill, active, t, static_split):
     """Shared L2 data cache + DRAM for a batch of line addresses.
 
     Returns (l2c', dram', latency, l2_hit). `may_fill` implements the MASK
-    L2 bypass decision; `static_split` gives each app half the ways by
-    restricting its set index range (Static design)."""
+    L2 bypass decision; `static_split` gives each app an equal slice of the
+    sets/channels by restricting its index range (Static design)."""
     m = cfg.design.mask
     key = jnp.where(static_split,
-                    (line % (cfg.l2_sets // cfg.n_apps))
-                    + app * (cfg.l2_sets // cfg.n_apps),
+                    static_partition_index(line, cfg.l2_sets, cfg.n_apps,
+                                           app),
                     line % cfg.l2_sets)
     # reuse TLB machinery: tag = full line id, "asid" field = 0
     zero = jnp.zeros_like(line)
-    tagged = key * 0 + line  # probe on line id within the selected set
-    l2c, hit = tlb_mod.probe(l2c._replace(), tagged * cfg.l2_sets + key,
-                             zero, active, t)
+    l2c, hit = tlb_mod.probe(l2c, line * cfg.l2_sets + key, zero, active, t)
     lat = jnp.where(hit, cfg.lat_l2_cache, 0)
     miss = active & ~hit
 
     channel = (line % cfg.n_channels).astype(jnp.int32)
     channel = jnp.where(static_split,
-                        (line % (cfg.n_channels // cfg.n_apps))
-                        + app * (cfg.n_channels // cfg.n_apps), channel)
+                        static_partition_index(line, cfg.n_channels,
+                                               cfg.n_apps, app), channel)
     bank = ((line // cfg.n_channels) % cfg.n_banks).astype(jnp.int32)
     row = (line // (cfg.n_channels * cfg.n_banks * 32)).astype(jnp.int32)
     dram, dlat = dram_sched.access(
         dram, channel, bank, row, app, is_tlb, miss,
         mask_enabled=m.dram_sched, thres_max=m.thres_max)
     lat = lat + jnp.where(miss, cfg.lat_l2_cache + dlat, 0)
-    l2c = tlb_mod.fill(l2c, tagged * cfg.l2_sets + key, zero,
+    l2c = tlb_mod.fill(l2c, line * cfg.l2_sets + key, zero,
                        miss & may_fill, t)
     return l2c, dram, lat, hit
 
 
-def step(cfg: SimConfig, params_mat, state: SimState):
-    """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params."""
+# ---------------------------------------------------------------------------
+# stage 2: translation (L1 TLB bank -> L2 TLB/bypass -> page walk)
+# ---------------------------------------------------------------------------
+
+class TransOut(NamedTuple):
+    """Per-core translation results + walk-level L2$ counters."""
+    trans_lat: jax.Array         # (C,) translation latency
+    l1_hit: jax.Array            # (C,) bool
+    l1_miss: jax.Array
+    l2_hit: jax.Array
+    byp_hit: jax.Array
+    l2_hit_eff: jax.Array        # L2 or bypass-cache hit
+    need_walk: jax.Array
+    merged: jax.Array            # joined an in-flight walk
+    new_walk: jax.Array          # started a fresh walk
+    walk_done_new: jax.Array     # (C,) completion time of fresh walks
+    dram_tlb_lat: jax.Array      # (C,) float32 DRAM latency on walk path
+    dram_tlb_n: jax.Array        # (C,) int32
+    l2c_hit: jax.Array           # () walk-request hits in the L2$
+    l2c_probe: jax.Array         # () walk-request probes of the L2$
+
+
+def translation(cfg: SimConfig, trans: TransState, data: DataState,
+                tokens: tok_mod.TokenState, sched: SchedOut, t
+                ) -> Tuple[TransState, DataState, TransOut]:
+    """Translate one request per core through the full TLB hierarchy."""
     m = cfg.design.mask
-    W, C, na = cfg.total_warps, cfg.n_cores, cfg.n_apps
-    warps_per_core = cfg.warps_per_core
-    t = state.t + 1
+    C = cfg.n_cores
+    vpn, asid, active = sched.vpn, sched.asid, sched.active
 
-    # ---------------- warp selection (oldest-ready per core) -------------
-    warp_id = jnp.arange(W)
-    core_of = warp_id // warps_per_core
-    slot_of = warp_id % warps_per_core
-    # cores are partitioned evenly between apps (oracle split, §6)
-    app_of_core = (jnp.arange(C) * na) // C
-    app_of = app_of_core[core_of]
-
-    ready = state.stall_until <= t
-    waiting = jnp.where(ready, t - state.stall_until, -1)
-    wait_grid = waiting.reshape(C, warps_per_core)
-    pick = jnp.argmax(wait_grid, axis=1)                  # (C,)
-    picked_warp = jnp.arange(C) * warps_per_core + pick
-    active = wait_grid[jnp.arange(C), pick] >= 0          # (C,)
-
-    app = app_of[picked_warp]
-    pos = state.pos[picked_warp]
-    vpn = gen_vpn(params_mat[app], app, picked_warp, pos, t)
-    asid = app  # one address space per application
-
-    # ---------------- L1 TLB ------------------------------------------
-    l1_hit, l1_lru = _per_core_l1_probe(
-        state.l1_tags, state.l1_asid, state.l1_lru, vpn, asid, t)
-    l1_hit = l1_hit & active
+    # ---------------- L1 TLB bank --------------------------------------
+    l1, l1_hit = tlb_mod.probe_bank(trans.l1, vpn, asid, active, t)
     if cfg.design.ideal_tlb:
         l1_hit = active
-
     l1_miss = active & ~l1_hit
 
     # ---------------- shared L2 TLB + bypass cache ---------------------
     use_l2tlb = cfg.design.use_l2_tlb and not cfg.design.ideal_tlb
-    l2tlb, byp_tlb = state.l2tlb, state.bypass_tlb
+    l2tlb, byp_tlb = trans.l2tlb, trans.bypass_tlb
     if use_l2tlb:
         l2tlb, l2_hit = tlb_mod.probe(l2tlb, vpn, asid, l1_miss, t)
         if m.tlb_tokens:
@@ -223,16 +284,16 @@ def step(cfg: SimConfig, params_mat, state: SimState):
 
     # ---------------- page walk (4 dependent PTE accesses) -------------
     # MSHR merge: outstanding walk for same (vpn, asid)?
-    wmatch = (state.walk_vpn[None, :] == vpn[:, None]) & \
-             (state.walk_asid[None, :] == asid[:, None]) & \
-             (state.walk_done[None, :] > t)
+    wmatch = (trans.walk_vpn[None, :] == vpn[:, None]) & \
+             (trans.walk_asid[None, :] == asid[:, None]) & \
+             (trans.walk_done[None, :] > t)
     merged = wmatch.any(axis=1) & need_walk
     merge_done = jnp.where(
-        merged, jnp.max(jnp.where(wmatch, state.walk_done[None, :], 0),
+        merged, jnp.max(jnp.where(wmatch, trans.walk_done[None, :], 0),
                         axis=1), 0)
 
     new_walk = need_walk & ~merged
-    n_live = (state.walk_done > t).sum()
+    n_live = (trans.walk_done > t).sum()
     # walker occupancy queue penalty (64 walker threads)
     over = jnp.maximum(n_live + jnp.cumsum(new_walk) - WALK_TABLE, 0)
     queue_pen = over * 30
@@ -243,9 +304,10 @@ def step(cfg: SimConfig, params_mat, state: SimState):
     walk_lat = jnp.zeros((C,), jnp.int32)
     dram_tlb_lat = jnp.zeros((C,), jnp.float32)
     dram_tlb_n = jnp.zeros((C,), jnp.int32)
-    l2c, dram, bp_state = state.l2c, state.dram, state.bypass
-    pwc = state.pwc
+    l2c, dram, bp_state = data.l2c, data.dram, data.bypass
+    pwc = trans.pwc
     static = jnp.asarray(cfg.design.static_partition)
+    l2c_hit = l2c_probe = jnp.zeros((), jnp.int32)
     for lvl in range(m.walk_levels):
         line = pte_lines[:, lvl]
         lvl_active = new_walk
@@ -262,26 +324,21 @@ def step(cfg: SimConfig, params_mat, state: SimState):
         else:
             may_fill = jnp.ones((C,), bool)
         l2c, dram, lat, l2hit = _l2_cache_access(
-            cfg, l2c, dram, line, app, jnp.ones((C,), bool), depth_tag,
+            cfg, l2c, dram, line, sched.app, jnp.ones((C,), bool),
             may_fill, go_l2, t, static)
         bp_state = bp_mod.record(bp_state, depth_tag, l2hit, go_l2)
         walk_lat = walk_lat + jnp.where(go_l2, lat, 0)
         went_dram = go_l2 & ~l2hit
         dram_tlb_lat = dram_tlb_lat + jnp.where(went_dram, lat, 0)
         dram_tlb_n = dram_tlb_n + went_dram.astype(jnp.int32)
-        c_tlb_hit = (go_l2 & l2hit).sum(dtype=jnp.int32)
-        c_tlb_probe = go_l2.sum(dtype=jnp.int32)
-        if lvl == 0:
-            cum_tlb_hit, cum_tlb_probe = c_tlb_hit, c_tlb_probe
-        else:
-            cum_tlb_hit = cum_tlb_hit + c_tlb_hit
-            cum_tlb_probe = cum_tlb_probe + c_tlb_probe
+        l2c_hit = l2c_hit + (go_l2 & l2hit).sum(dtype=jnp.int32)
+        l2c_probe = l2c_probe + go_l2.sum(dtype=jnp.int32)
 
     walk_lat = walk_lat + queue_pen
     walk_done_new = t + cfg.lat_l2_tlb + walk_lat
 
     # install new walks into free slots (expired entries are free)
-    free = state.walk_done <= t
+    free = trans.walk_done <= t
     order_slots = jnp.cumsum(new_walk) - 1
     free_idx = jnp.where(free, jnp.arange(WALK_TABLE), BIG)
     free_sorted = jnp.sort(free_idx)
@@ -291,14 +348,14 @@ def step(cfg: SimConfig, params_mat, state: SimState):
     can_install = slot_for < WALK_TABLE
     slot_safe = jnp.clip(slot_for, 0, WALK_TABLE - 1).astype(jnp.int32)
     inst = new_walk & can_install
-    walk_vpn = state.walk_vpn.at[slot_safe].set(
-        jnp.where(inst, vpn, state.walk_vpn[slot_safe]))
-    walk_asid = state.walk_asid.at[slot_safe].set(
-        jnp.where(inst, asid, state.walk_asid[slot_safe]))
-    walk_done = state.walk_done.at[slot_safe].set(
-        jnp.where(inst, walk_done_new, state.walk_done[slot_safe]))
-    walk_merged_arr = state.walk_merged.at[slot_safe].set(
-        jnp.where(inst, 1, state.walk_merged[slot_safe]))
+    walk_vpn = trans.walk_vpn.at[slot_safe].set(
+        jnp.where(inst, vpn, trans.walk_vpn[slot_safe]))
+    walk_asid = trans.walk_asid.at[slot_safe].set(
+        jnp.where(inst, asid, trans.walk_asid[slot_safe]))
+    walk_done = trans.walk_done.at[slot_safe].set(
+        jnp.where(inst, walk_done_new, trans.walk_done[slot_safe]))
+    walk_merged_arr = trans.walk_merged.at[slot_safe].set(
+        jnp.where(inst, 1, trans.walk_merged[slot_safe]))
     # bump merge counters
     first_match = jnp.argmax(wmatch, axis=1)
     walk_merged_arr = walk_merged_arr.at[first_match].add(
@@ -318,83 +375,150 @@ def step(cfg: SimConfig, params_mat, state: SimState):
         if m.tlb_tokens:
             # tokens are distributed round-robin over the app's cores in
             # warpID order: per-core allowance = tokens / cores_per_app
-            cores_per_app = C // na
-            tok_per_core = state.tokens.tokens[app] // cores_per_app
-            has_tok = slot_of[picked_warp] < tok_per_core
-            fill_l2 = need_walk & has_tok & ~state.tokens.first_epoch
-            fill_l2 = fill_l2 | (need_walk & state.tokens.first_epoch)
+            cores_per_app = jnp.asarray(cfg.cores_per_app, jnp.int32)
+            tok_per_core = tokens.tokens[sched.app] // cores_per_app[sched.app]
+            has_tok = sched.slot < tok_per_core
+            fill_l2 = need_walk & has_tok & ~tokens.first_epoch
+            fill_l2 = fill_l2 | (need_walk & tokens.first_epoch)
             fill_byp = need_walk & ~fill_l2
             byp_tlb = tlb_mod.fill(byp_tlb, vpn, asid, fill_byp, t)
         else:
             fill_l2 = need_walk
         l2tlb = tlb_mod.fill(l2tlb, vpn, asid, fill_l2, t)
-    l1_tags, l1_asid_arr, l1_lru = _per_core_l1_fill(
-        state.l1_tags, state.l1_asid, l1_lru, vpn, asid, l1_miss, t)
+    l1 = tlb_mod.fill_bank(l1, vpn, asid, l1_miss, t)
 
-    # ---------------- data access --------------------------------------
-    pfn = pt_mod.translate(pt_mod.PageTableConfig(), asid, vpn)
-    r = _mix(pfn.astype(jnp.uint32) + pos.astype(jnp.uint32))
+    trans_out = TransOut(
+        trans_lat=trans_lat, l1_hit=l1_hit, l1_miss=l1_miss, l2_hit=l2_hit,
+        byp_hit=byp_hit, l2_hit_eff=l2_hit_eff, need_walk=need_walk,
+        merged=merged, new_walk=new_walk, walk_done_new=walk_done_new,
+        dram_tlb_lat=dram_tlb_lat, dram_tlb_n=dram_tlb_n,
+        l2c_hit=l2c_hit, l2c_probe=l2c_probe)
+    return (TransState(l1=l1, l2tlb=l2tlb, bypass_tlb=byp_tlb, pwc=pwc,
+                       walk_vpn=walk_vpn, walk_asid=walk_asid,
+                       walk_done=walk_done, walk_merged=walk_merged_arr),
+            DataState(l2c=l2c, dram=dram, bypass=bp_state),
+            trans_out)
+
+
+# ---------------------------------------------------------------------------
+# stage 3: data path (L1D -> L2$ -> DRAM)
+# ---------------------------------------------------------------------------
+
+class DataOut(NamedTuple):
+    """Per-core data-access results, all arrays (n_cores,)."""
+    data_lat: jax.Array
+    l1d_hit: jax.Array
+    go_l2d: jax.Array            # bool: reached the shared L2$
+    dlat: jax.Array              # L2$/DRAM part of the latency
+    l2d_hit: jax.Array           # bool: any of the lines hit the L2$
+
+
+def datapath(cfg: SimConfig, data: DataState, params_mat, sched: SchedOut, t
+             ) -> Tuple[DataState, DataOut]:
+    """Data access for the translated request (after the TLB hierarchy)."""
+    C = cfg.n_cores
+    l2c, dram, bp_state = data.l2c, data.dram, data.bypass
+    static = jnp.asarray(cfg.design.static_partition)
+
+    pfn = pt_mod.translate(pt_mod.PageTableConfig(), sched.asid, sched.vpn)
+    r = _mix(pfn.astype(jnp.uint32) + sched.pos.astype(jnp.uint32))
     l1d_hit = (r % jnp.uint32(1024)).astype(jnp.int32) \
-        < params_mat[app, 6]
+        < params_mat[sched.app, FIELD["l1d_hit_milli"]]
     # warp-wide (divergent) data access: one memory instruction touches
     # DATA_WIDTH cache lines, serviced in parallel (latency = max). This is
     # what gives data traffic its realistic flooding pressure on the shared
     # L2 relative to page-walk traffic.
-    DATA_WIDTH = 4
-    go_l2d = active & ~l1d_hit
+    go_l2d = sched.active & ~l1d_hit
     dlat = jnp.zeros((C,), jnp.int32)
     l2d_hit_any = jnp.zeros((C,), bool)
     for k in range(DATA_WIDTH):
         r3 = _mix(r + jnp.uint32((0x85EBCA6B + 0x9E3779B9 * k) & 0xFFFFFFFF))
         data_line = pfn * 32 + (r3 % jnp.uint32(32)).astype(jnp.int32)
         l2c, dram, dlat_k, l2d_hit = _l2_cache_access(
-            cfg, l2c, dram, data_line, app, jnp.zeros((C,), bool),
-            jnp.zeros((C,), jnp.int32), jnp.ones((C,), bool), go_l2d, t,
-            static)
+            cfg, l2c, dram, data_line, sched.app, jnp.zeros((C,), bool),
+            jnp.ones((C,), bool), go_l2d, t, static)
         dlat = jnp.maximum(dlat, dlat_k)
         l2d_hit_any = l2d_hit_any | l2d_hit
         bp_state = bp_mod.record(bp_state, jnp.zeros((C,), jnp.int32),
                                  l2d_hit, go_l2d)
-    l2d_hit = l2d_hit_any
     data_lat = jnp.where(l1d_hit, cfg.lat_l1_data, cfg.lat_l1_data + dlat)
+    return (DataState(l2c=l2c, dram=dram, bypass=bp_state),
+            DataOut(data_lat=data_lat, l1d_hit=l1d_hit, go_l2d=go_l2d,
+                    dlat=dlat, l2d_hit=l2d_hit_any))
 
-    # ---------------- retire / stall ------------------------------------
-    gap = params_mat[app, 5]
-    total_lat = trans_lat + data_lat + gap
-    stall_until = state.stall_until.at[picked_warp].set(
-        jnp.where(active, t + total_lat, state.stall_until[picked_warp]))
-    instr = state.instr.at[picked_warp].add(
-        jnp.where(active, (1 + gap).astype(jnp.float32), 0.0))
-    pos_new = state.pos.at[picked_warp].add(jnp.where(active, 1, 0))
 
-    # ---------------- statistics ----------------------------------------
-    oh = jax.nn.one_hot(app, na, dtype=jnp.int32) * active[:, None]
+# ---------------------------------------------------------------------------
+# stage 4: statistics accumulation
+# ---------------------------------------------------------------------------
+
+def accumulate_stats(stats: StatState, n_apps: int, sched: SchedOut,
+                     tout: TransOut, dout: DataOut, t) -> StatState:
+    """Fold one cycle's per-core outcomes into the per-app counters."""
+    oh = jax.nn.one_hot(sched.app, n_apps, dtype=jnp.int32) \
+        * sched.active[:, None]
     ohf = oh.astype(jnp.float32)
-    tokens = tok_mod.record(state.tokens, app, l2_hit_eff, l1_miss)
-    st = dict(
-        s_l1_hit=state.s_l1_hit + (oh * l1_hit[:, None]).sum(0),
-        s_l1_miss=state.s_l1_miss + (oh * l1_miss[:, None]).sum(0),
-        s_l2_hit=state.s_l2_hit + (oh * l2_hit[:, None]).sum(0),
-        s_l2_miss=state.s_l2_miss + (oh * need_walk[:, None]).sum(0),
-        s_byp_hit=state.s_byp_hit + (oh * byp_hit[:, None]).sum(0),
-        s_byp_probe=state.s_byp_probe + (oh * (l1_miss & ~l2_hit)[:, None]).sum(0),
-        s_walk_lat=state.s_walk_lat
-        + (ohf * jnp.where(new_walk, walk_done_new - t, 0)[:, None]).sum(0),
-        s_walks=state.s_walks + (oh * new_walk[:, None]).sum(0),
-        s_stall_per_miss=state.s_stall_per_miss
-        + (ohf * merged[:, None]).sum(0),
+    psum = lambda x: (oh * x[:, None]).sum(0)  # noqa: E731
+    fsum = lambda x: (ohf * x[:, None]).sum(0)  # noqa: E731
+    return StatState(
+        s_l1_hit=stats.s_l1_hit + psum(tout.l1_hit),
+        s_l1_miss=stats.s_l1_miss + psum(tout.l1_miss),
+        s_l2_hit=stats.s_l2_hit + psum(tout.l2_hit),
+        s_l2_miss=stats.s_l2_miss + psum(tout.need_walk),
+        s_byp_hit=stats.s_byp_hit + psum(tout.byp_hit),
+        s_byp_probe=stats.s_byp_probe + psum(tout.l1_miss & ~tout.l2_hit),
+        s_walk_lat=stats.s_walk_lat
+        + fsum(jnp.where(tout.new_walk, tout.walk_done_new - t, 0)),
+        s_walks=stats.s_walks + psum(tout.new_walk),
+        s_stall_per_miss=stats.s_stall_per_miss + fsum(tout.merged),
+        s_dram_tlb_lat=stats.s_dram_tlb_lat + fsum(tout.dram_tlb_lat),
+        s_dram_tlb_n=stats.s_dram_tlb_n + psum(tout.dram_tlb_n),
+        s_dram_data_lat=stats.s_dram_data_lat
+        + fsum(jnp.where(dout.go_l2d, dout.dlat, 0)),
+        s_dram_data_n=stats.s_dram_data_n + psum(dout.go_l2d),
+        s_l2c_tlb_hit=stats.s_l2c_tlb_hit + tout.l2c_hit,
+        s_l2c_tlb_probe=stats.s_l2c_tlb_probe + tout.l2c_probe,
+        s_l2c_data_hit=stats.s_l2c_data_hit
+        + (dout.go_l2d & dout.l2d_hit).sum(dtype=jnp.int32),
+        s_l2c_data_probe=stats.s_l2c_data_probe
+        + dout.go_l2d.sum(dtype=jnp.int32),
     )
 
-    # ---------------- epoch maintenance ---------------------------------
+
+# ---------------------------------------------------------------------------
+# retire + epoch maintenance
+# ---------------------------------------------------------------------------
+
+def retire(stall_until, instr, pos, sched: SchedOut, total_lat, gap, t):
+    """Stall issued warps until their latency resolves; credit instrs."""
+    w = sched.picked_warp
+    stall_until = stall_until.at[w].set(
+        jnp.where(sched.active, t + total_lat, stall_until[w]))
+    instr = instr.at[w].add(
+        jnp.where(sched.active, (1 + gap).astype(jnp.float32), 0.0))
+    pos = pos.at[w].add(jnp.where(sched.active, 1, 0))
+    return stall_until, instr, pos
+
+
+def epoch_maintenance(cfg: SimConfig, trans: TransState,
+                      tokens: tok_mod.TokenState, data: DataState, t
+                      ) -> Tuple[tok_mod.TokenState, DataState]:
+    """Every epoch_cycles: token hill-climb, DRAM pressure, bypass latch.
+
+    `trans` must be the PRE-update translation state: the walk table is
+    sampled before this cycle's installs, matching the paper's epoch-end
+    census of in-flight walks."""
+    m = cfg.design.mask
+    na = cfg.n_apps
+
     def do_epoch(args):
         tokens, dram, bp = args
-        warps_per_app = jnp.full((na,), W // na, jnp.int32)
+        warps_per_app = jnp.asarray(cfg.warps_per_app, jnp.int32)
         conc = jnp.zeros((na,), jnp.int32).at[
-            jnp.clip(state.walk_asid, 0, na - 1)].add(
-            (state.walk_done > t).astype(jnp.int32))
+            jnp.clip(trans.walk_asid, 0, na - 1)].add(
+            (trans.walk_done > t).astype(jnp.int32))
         stalled = jnp.zeros((na,), jnp.int32).at[
-            jnp.clip(state.walk_asid, 0, na - 1)].add(
-            state.walk_merged * (state.walk_done > t))
+            jnp.clip(trans.walk_asid, 0, na - 1)].add(
+            trans.walk_merged * (trans.walk_done > t))
         dram = dram_sched.update_pressure(dram, conc, stalled)
         return (tok_mod.epoch_update(tokens, warps_per_app,
                                      step_frac=m.token_step_frac), dram,
@@ -403,24 +527,31 @@ def step(cfg: SimConfig, params_mat, state: SimState):
     is_epoch = (t % m.epoch_cycles) == 0
     tokens, dram, bp_state = jax.lax.cond(
         is_epoch & jnp.asarray(m.tlb_tokens or m.dram_sched or m.l2_bypass),
-        do_epoch, lambda args: args, (tokens, dram, bp_state))
+        do_epoch, lambda args: args, (tokens, data.dram, data.bypass))
+    return tokens, data._replace(dram=dram, bypass=bp_state)
 
-    return SimState(
-        t=t, stall_until=stall_until, instr=instr, pos=pos_new,
-        l1_tags=l1_tags, l1_asid=l1_asid_arr, l1_lru=l1_lru,
-        l2tlb=l2tlb, bypass_tlb=byp_tlb, pwc=pwc, l2c=l2c,
-        tokens=tokens, bypass=bp_state, dram=dram,
-        walk_vpn=walk_vpn, walk_asid=walk_asid, walk_done=walk_done,
-        walk_merged=walk_merged_arr,
-        s_dram_tlb_lat=state.s_dram_tlb_lat + (ohf * dram_tlb_lat[:, None]).sum(0),
-        s_dram_tlb_n=state.s_dram_tlb_n + (oh * dram_tlb_n[:, None]).sum(0),
-        s_dram_data_lat=state.s_dram_data_lat
-        + (ohf * jnp.where(go_l2d, dlat, 0)[:, None]).sum(0),
-        s_dram_data_n=state.s_dram_data_n + (oh * go_l2d[:, None]).sum(0),
-        s_l2c_tlb_hit=state.s_l2c_tlb_hit + cum_tlb_hit,
-        s_l2c_tlb_probe=state.s_l2c_tlb_probe + cum_tlb_probe,
-        s_l2c_data_hit=state.s_l2c_data_hit
-        + (go_l2d & l2d_hit).sum(dtype=jnp.int32),
-        s_l2c_data_probe=state.s_l2c_data_probe + go_l2d.sum(dtype=jnp.int32),
-        **st,
-    )
+
+# ---------------------------------------------------------------------------
+# one-cycle transition: thin composition of the stages
+# ---------------------------------------------------------------------------
+
+def step(cfg: SimConfig, params_mat, state: SimState) -> SimState:
+    """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params."""
+    t = state.t + 1
+    sched = warp_sched(cfg, params_mat, state.stall_until, state.pos, t)
+    trans_st, data_st, tout = translation(
+        cfg, state.trans, state.data, state.tokens, sched, t)
+    data_st, dout = datapath(cfg, data_st, params_mat, sched, t)
+
+    gap = params_mat[sched.app, FIELD["gap"]]
+    total_lat = tout.trans_lat + dout.data_lat + gap
+    stall_until, instr, pos = retire(
+        state.stall_until, state.instr, state.pos, sched, total_lat, gap, t)
+
+    tokens = tok_mod.record(state.tokens, sched.app, tout.l2_hit_eff,
+                            tout.l1_miss)
+    stats = accumulate_stats(state.stats, cfg.n_apps, sched, tout, dout, t)
+    tokens, data_st = epoch_maintenance(cfg, state.trans, tokens, data_st, t)
+
+    return SimState(t=t, stall_until=stall_until, instr=instr, pos=pos,
+                    trans=trans_st, data=data_st, tokens=tokens, stats=stats)

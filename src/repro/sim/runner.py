@@ -1,9 +1,16 @@
-"""Simulation runner: solo/pair runs, full design sweeps, metric extraction."""
+"""Simulation runner: N-app mixes, solo/pair wrappers, design sweeps,
+metric extraction.
+
+`run_mix(design, benches)` is the primary entry point: it co-runs
+len(benches) applications (None entries are idle partners) and returns
+per-app stats. `run_pair` / `run_solo` are thin 2-app wrappers kept for
+the paper's pair-based experiments; `run_batch` vmaps many same-size
+mixes through one compile.
+"""
 from __future__ import annotations
 
-import dataclasses
 import functools
-from typing import Dict, List, Sequence, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -34,105 +41,103 @@ def _compiled_run(cfg: SimConfig):
 @functools.lru_cache(maxsize=64)
 def _compiled_batch_run(cfg: SimConfig):
     """vmapped over a leading batch of workload parameter matrices — one
-    compile serves every pair/solo under a design."""
-
-    def run(params_mat):
-        st = init_state(cfg)
-
-        def body(s, _):
-            return step(cfg, params_mat, s), None
-
-        final, _ = jax.lax.scan(body, st, None, length=cfg.sim_cycles)
-        return final
-
-    return jax.jit(jax.vmap(run))
-
-
-IDLE_ROW = np.array([1, 1, 1024, 1, 0, 0, 1, 4000, 1024, 1], np.int32)
-
-
-def run_batch(design_name: str, bench_pairs: Sequence[Tuple[str, str]],
-              cycles: int = 60_000) -> List[Dict]:
-    """Run many two-app workloads at once (vmap). An entry may be
-    (bench, None) for a solo run (idle partner)."""
-    cfg = SimConfig(n_apps=2, sim_cycles=cycles, design=design(design_name))
-    mats = []
-    for a, b in bench_pairs:
-        rows = [app_matrix([a])[0],
-                app_matrix([b])[0] if b is not None else IDLE_ROW]
-        mats.append(np.stack(rows))
-    pm = jnp.asarray(np.stack(mats))
-    final = _compiled_batch_run(cfg)(pm)
-    out = []
-    for i in range(len(bench_pairs)):
-        sub = jax.tree_util.tree_map(lambda x: np.asarray(x)[i], final)
-        out.append(_stats(cfg, SimState(*sub)))
-    return out
+    compile serves every mix/solo under a design."""
+    return jax.jit(jax.vmap(_compiled_run(cfg)))
 
 
 def _stats(cfg: SimConfig, st: SimState) -> Dict[str, np.ndarray]:
     na = cfg.n_apps
-    W = cfg.total_warps
-    warp_app = (np.arange(W) // cfg.warps_per_core * na) // cfg.n_cores
+    warp_app = np.repeat(np.asarray(cfg.app_of_core), cfg.warps_per_core)
     instr = np.asarray(st.instr)
     ipc = np.array([instr[warp_app == a].sum() for a in range(na)]) \
         / float(st.t)
+    s = st.stats
     g = lambda x: np.asarray(x, np.float64)  # noqa: E731
-    l1p = g(st.s_l1_hit) + g(st.s_l1_miss)
-    l2p = g(st.s_l2_hit) + g(st.s_l2_miss)
+    l1p = g(s.s_l1_hit) + g(s.s_l1_miss)
+    l2p = g(s.s_l2_hit) + g(s.s_l2_miss)
     return {
         "ipc": ipc,
-        "l1_hit_rate": g(st.s_l1_hit) / np.maximum(l1p, 1),
-        "l1_miss_rate": g(st.s_l1_miss) / np.maximum(l1p, 1),
-        "l2_hit_rate": g(st.s_l2_hit) / np.maximum(l2p, 1),
-        "l2_miss_rate": g(st.s_l2_miss) / np.maximum(l2p, 1),
-        "byp_hit_rate": g(st.s_byp_hit) / np.maximum(g(st.s_byp_probe), 1),
-        "walk_lat": g(st.s_walk_lat) / np.maximum(g(st.s_walks), 1),
-        "walks": g(st.s_walks),
-        "stalls_per_miss": g(st.s_stall_per_miss) / np.maximum(g(st.s_walks), 1),
-        "dram_tlb_lat": g(st.s_dram_tlb_lat) / np.maximum(g(st.s_dram_tlb_n), 1),
-        "dram_data_lat": g(st.s_dram_data_lat) / np.maximum(g(st.s_dram_data_n), 1),
-        "dram_tlb_n": g(st.s_dram_tlb_n),
-        "dram_data_n": g(st.s_dram_data_n),
+        "l1_hit_rate": g(s.s_l1_hit) / np.maximum(l1p, 1),
+        "l1_miss_rate": g(s.s_l1_miss) / np.maximum(l1p, 1),
+        "l2_hit_rate": g(s.s_l2_hit) / np.maximum(l2p, 1),
+        "l2_miss_rate": g(s.s_l2_miss) / np.maximum(l2p, 1),
+        "byp_hit_rate": g(s.s_byp_hit) / np.maximum(g(s.s_byp_probe), 1),
+        "walk_lat": g(s.s_walk_lat) / np.maximum(g(s.s_walks), 1),
+        "walks": g(s.s_walks),
+        "stalls_per_miss": g(s.s_stall_per_miss) / np.maximum(g(s.s_walks), 1),
+        "dram_tlb_lat": g(s.s_dram_tlb_lat) / np.maximum(g(s.s_dram_tlb_n), 1),
+        "dram_data_lat": g(s.s_dram_data_lat)
+        / np.maximum(g(s.s_dram_data_n), 1),
+        "dram_tlb_n": g(s.s_dram_tlb_n),
+        "dram_data_n": g(s.s_dram_data_n),
         # L2 data-cache hit rate for TLB requests (Table 5)
-        "l2c_tlb_hit_rate": (g(st.s_l2c_tlb_hit)
-                             / max(g(st.s_l2c_tlb_probe), 1)),
-        "l2c_data_hit_rate": (g(st.s_l2c_data_hit)
-                              / max(g(st.s_l2c_data_probe), 1)),
+        "l2c_tlb_hit_rate": (g(s.s_l2c_tlb_hit)
+                             / max(g(s.s_l2c_tlb_probe), 1)),
+        "l2c_data_hit_rate": (g(s.s_l2c_data_hit)
+                              / max(g(s.s_l2c_data_probe), 1)),
         "tokens": np.asarray(st.tokens.tokens),
         "cycles": float(st.t),
     }
 
 
+def _mix_matrix(benches: Sequence[Optional[str]]) -> np.ndarray:
+    """(n_apps, N_FIELDS) parameter matrix; None entries are idle apps."""
+    return app_matrix(list(benches))
+
+
+def run_mix(design_name: str, benches: Sequence[Optional[str]],
+            cycles: int = 60_000) -> Dict:
+    """Co-run N apps under a design; returns per-app stats.
+
+    `benches` may contain None for idle partners (the §6 `IPC_alone`
+    emulation keeps the core split of the shared run but removes memory
+    contention from the partner slots).
+    """
+    cfg = SimConfig(n_apps=len(benches), sim_cycles=cycles,
+                    design=design(design_name))
+    pm = jnp.asarray(_mix_matrix(benches))
+    st = _compiled_run(cfg)(pm)
+    return _stats(cfg, st)
+
+
+def run_batch(design_name: str,
+              bench_mixes: Sequence[Tuple[Optional[str], ...]],
+              cycles: int = 60_000) -> List[Dict]:
+    """Run many same-size workload mixes at once (vmap). An entry may
+    contain None for a solo run (idle partner)."""
+    sizes = {len(m) for m in bench_mixes}
+    if len(sizes) != 1:
+        raise ValueError(f"all mixes must have the same size, got {sizes}")
+    cfg = SimConfig(n_apps=sizes.pop(), sim_cycles=cycles,
+                    design=design(design_name))
+    pm = jnp.asarray(np.stack([_mix_matrix(m) for m in bench_mixes]))
+    final = _compiled_batch_run(cfg)(pm)
+    out = []
+    for i in range(len(bench_mixes)):
+        sub = jax.tree_util.tree_map(lambda x: np.asarray(x)[i], final)
+        out.append(_stats(cfg, sub))
+    return out
+
+
 def run_pair(design_name: str, bench_a: str, bench_b: str,
              cycles: int = 60_000) -> Dict:
     """Co-run two apps under a design; returns per-app stats."""
-    cfg = SimConfig(n_apps=2, sim_cycles=cycles, design=design(design_name))
-    pm = jnp.asarray(app_matrix([bench_a, bench_b]))
-    st = _compiled_run(cfg)(pm)
-    return _stats(cfg, st)
+    return run_mix(design_name, [bench_a, bench_b], cycles)
 
 
-def run_solo(design_name: str, bench: str, cycles: int = 60_000,
-             half_gpu: bool = True) -> Dict:
-    """IPC_alone: same core count as in the shared run (paper §6), exclusive
-    memory system. Modeled as the app running twice (self-paired) under a
-    partitioned ideal? No — paper: same cores, alone: we emulate by pairing
-    with an idle app (zero-issue)."""
-    cfg = SimConfig(n_apps=2, sim_cycles=cycles, design=design(design_name))
-    # idle partner: working set 1 page, enormous think gap -> never issues
-    # contention
-    pm = np.stack([app_matrix([bench])[0],
-                   np.array([1, 1, 1024, 0, 1, 4000, 1024], np.int32)])
-    st = _compiled_run(cfg)(pm)
-    return _stats(cfg, st)
+def run_solo(design_name: str, bench: str, cycles: int = 60_000) -> Dict:
+    """IPC_alone: same core count as in the shared run (paper §6),
+    exclusive memory system — emulated by pairing with an idle app."""
+    return run_mix(design_name, [bench, None], cycles)
 
 
-def weighted_speedup(pair_stats, solo_a, solo_b) -> float:
-    return float(pair_stats["ipc"][0] / max(solo_a["ipc"][0], 1e-9)
-                 + pair_stats["ipc"][1] / max(solo_b["ipc"][0], 1e-9))
+def weighted_speedup(mix_stats, *solos) -> float:
+    """Sum of per-app IPC / IPC_alone over the mix (any N)."""
+    return float(sum(mix_stats["ipc"][i] / max(s["ipc"][0], 1e-9)
+                     for i, s in enumerate(solos)))
 
 
-def max_slowdown(pair_stats, solo_a, solo_b) -> float:
-    return float(max(solo_a["ipc"][0] / max(pair_stats["ipc"][0], 1e-9),
-                     solo_b["ipc"][0] / max(pair_stats["ipc"][1], 1e-9)))
+def max_slowdown(mix_stats, *solos) -> float:
+    """Unfairness: worst per-app IPC_alone / IPC over the mix (any N)."""
+    return float(max(s["ipc"][0] / max(mix_stats["ipc"][i], 1e-9)
+                     for i, s in enumerate(solos)))

@@ -57,13 +57,17 @@ class AppParams:
     revisit: int         # accesses per page before moving on (spatial loc.)
 
     def as_array(self) -> np.ndarray:
-        return np.array([self.ws_pages, self.hot_pages, self.hot_milli,
-                         self.warm_pages, self.warm_milli, self.seq_milli,
-                         self.stride, self.gap, self.l1d_hit_milli,
-                         self.revisit], np.int32)
+        out = np.array([getattr(self, f) for f in FIELDS], np.int32)
+        assert out.shape == (N_FIELDS,)
+        return out
 
 
-N_FIELDS = 10
+# field order of the (n_apps, N_FIELDS) parameter matrices, derived from the
+# dataclass so it cannot drift from `as_array` / `gen_vpn` / `idle_app`
+FIELDS: Tuple[str, ...] = tuple(
+    f.name for f in dataclasses.fields(AppParams) if f.name != "name")
+FIELD: Dict[str, int] = {name: i for i, name in enumerate(FIELDS)}
+N_FIELDS = len(FIELDS)
 
 
 def _jitter(name: str, lo: float, hi: float) -> float:
@@ -117,9 +121,22 @@ def make_app(name: str) -> AppParams:
     )
 
 
+def idle_app() -> AppParams:
+    """Partner that effectively never issues (gap >> per-access budget) and
+    never misses (single hot page): the §6 `IPC_alone` baseline keeps the
+    app's core share while leaving the memory system uncontended."""
+    return AppParams(name="__idle__", ws_pages=1, hot_pages=1, hot_milli=1024,
+                     warm_pages=1, warm_milli=0, seq_milli=0, stride=1,
+                     gap=4000, l1d_hit_milli=1024, revisit=1)
+
+
+IDLE_ROW = idle_app().as_array()
+
+
 def app_matrix(names) -> np.ndarray:
-    """(n_apps, N_FIELDS) int32 parameter matrix."""
-    return np.stack([make_app(n).as_array() for n in names])
+    """(n_apps, N_FIELDS) int32 parameter matrix. None entries -> idle app."""
+    return np.stack([make_app(n).as_array() if n is not None else IDLE_ROW
+                     for n in names])
 
 
 def gen_vpn(params_row, app_id, warp_id, pos, t):
@@ -127,8 +144,10 @@ def gen_vpn(params_row, app_id, warp_id, pos, t):
 
     params_row: (N_FIELDS,) int32 for this app; t: scalar sim time.
     """
-    (ws, hot, hot_m, warm, warm_m, seq_m, stride, gap, _, rev) = [
-        params_row[..., i] for i in range(10)]
+    f = lambda name: params_row[..., FIELD[name]]  # noqa: E731
+    ws, hot, hot_m = f("ws_pages"), f("hot_pages"), f("hot_milli")
+    warm, warm_m, seq_m = f("warm_pages"), f("warm_milli"), f("seq_milli")
+    stride, rev = f("stride"), f("revisit")
     # page index advances every `rev` accesses (intra-page spatial locality);
     # the stream selector is drawn per page-epoch so revisits return to the
     # SAME page.
@@ -160,21 +179,40 @@ def gen_vpn(params_row, app_id, warp_id, pos, t):
     return vpn + app_id * (1 << 22)
 
 
-def pair_workloads(seed: int = 7, n_pairs: int = 35) -> List[Tuple[str, str]]:
-    """35 random pairs avoiding low-low apps (paper §6)."""
+def mix_workloads(seed: int = 7, n_mixes: int = 35,
+                  n_apps: int = 2) -> List[Tuple[str, ...]]:
+    """Random N-app bundles avoiding low-low apps (paper §6 generalized).
+
+    The n_apps=2 draw sequence is identical to the paper sweep's historical
+    pairing, so cached sweep results stay valid.
+    """
+    import math
     rng = np.random.RandomState(seed)
     eligible = [b for b in BENCHES if CATEGORY[b] != ("low", "low")]
-    pairs = set()
-    out = []
-    while len(out) < n_pairs:
-        a, b = rng.choice(eligible, 2, replace=False)
-        if (a, b) in pairs or (b, a) in pairs:
+    if n_apps > len(eligible):
+        raise ValueError(f"n_apps={n_apps} exceeds {len(eligible)} "
+                         "eligible benchmarks")
+    if n_mixes > math.comb(len(eligible), n_apps):
+        raise ValueError(
+            f"n_mixes={n_mixes} exceeds the "
+            f"{math.comb(len(eligible), n_apps)} distinct {n_apps}-app "
+            "bundles")
+    seen, out = set(), []
+    while len(out) < n_mixes:
+        mix = tuple(str(b) for b in rng.choice(eligible, n_apps,
+                                               replace=False))
+        if frozenset(mix) in seen:
             continue
-        pairs.add((a, b))
-        out.append((a, b))
+        seen.add(frozenset(mix))
+        out.append(mix)
     return out
 
 
-def hmr_class(pair: Tuple[str, str]) -> int:
-    """0/1/2 HMR: count of high-L1,high-L2 apps in the bundle."""
-    return sum(1 for b in pair if CATEGORY[b] == ("high", "high"))
+def pair_workloads(seed: int = 7, n_pairs: int = 35) -> List[Tuple[str, str]]:
+    """35 random pairs avoiding low-low apps (paper §6)."""
+    return mix_workloads(seed, n_pairs, 2)
+
+
+def hmr_class(mix: Tuple[str, ...]) -> int:
+    """0..len(mix) HMR: count of high-L1,high-L2 apps in the bundle."""
+    return sum(1 for b in mix if CATEGORY[b] == ("high", "high"))

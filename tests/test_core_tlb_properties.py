@@ -1,0 +1,49 @@
+"""Hypothesis property tests for the TLB and page-table cores.
+
+Kept separate from test_core_tlb.py so the deterministic unit tests still
+run when `hypothesis` is absent; this module skips itself gracefully.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.core import page_table as pt  # noqa: E402
+from repro.core import tlb as tlb_mod  # noqa: E402
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 1000), min_size=1, max_size=16),
+       st.integers(0, 3))
+def test_tlb_property_fill_probe(vpns, asid):
+    st_ = tlb_mod.init(64, 16)
+    v = jnp.asarray(vpns, jnp.int32)
+    a = jnp.full((len(vpns),), asid, jnp.int32)
+    act = jnp.ones(len(vpns), bool)
+    st_ = tlb_mod.fill(st_, v, a, act, 1)
+    # at least the LAST filled instance of each distinct set survives
+    st_, hit = tlb_mod.probe(st_, v, a, act, 2)
+    # every distinct vpn whose set wasn't contended must hit
+    sets = [x % 4 for x in vpns]
+    for i, x in enumerate(vpns):
+        if sets.count(x % 4) == 1:
+            assert bool(hit[i]), (vpns, i)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2**20 - 1), st.integers(0, 2**20 - 1),
+       st.integers(0, 63))
+def test_pte_root_sharing_property(vpn_a, vpn_b, asid):
+    """Near-root PTE lines are shared by nearby VPNs; leaves diverge."""
+    cfg = pt.PageTableConfig()
+    la = np.asarray(pt.pte_line_addresses(cfg, jnp.int32(asid),
+                                          jnp.int32(vpn_a)))
+    lb = np.asarray(pt.pte_line_addresses(cfg, jnp.int32(asid),
+                                          jnp.int32(vpn_b)))
+    # level 0 covers 2^27+ pages per line -> always shared for 20-bit vpns
+    assert la[0] == lb[0]
+    if vpn_a // 16 == vpn_b // 16:
+        assert la[-1] == lb[-1]   # same leaf line

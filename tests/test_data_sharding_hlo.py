@@ -126,10 +126,13 @@ with mesh:
     step = build_train_step(cfg, run, ocfg, sh.constrain)
     compiled = jax.jit(step, donate_argnums=(0, 1)).lower(
         params, opt, batch).compile()
-print("OK", compiled.cost_analysis()["flops"] > 0)
+ca = compiled.cost_analysis()
+ca = ca[0] if isinstance(ca, (list, tuple)) else ca  # jax<0.5 returns a list
+print("OK", ca["flops"] > 0)
 """
+    # the 8-fake-device CPU compile takes several minutes on slow hosts
     out = subprocess.run([sys.executable, "-c", code], capture_output=True,
-                         text=True, timeout=300,
+                         text=True, timeout=900,
                          env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
     assert "OK True" in out.stdout, out.stderr[-2000:]
 
