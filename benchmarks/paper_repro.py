@@ -18,11 +18,10 @@ from __future__ import annotations
 
 import json
 from pathlib import Path
-from typing import Dict, List
 
 import numpy as np
 
-from repro.sim.runner import run_batch
+from repro.sim.runner import Experiment
 from repro.sim.workloads import hmr_class, mix_workloads, pair_workloads
 
 REPORT_DIR = Path(__file__).resolve().parent.parent / "reports" / "sim"
@@ -44,49 +43,46 @@ def _cache(name: str, fn, force=False):
     return out
 
 
-def _pairs(n=N_PAIRS):
-    return pair_workloads()[:n]
+def _pairs(n=None):
+    return pair_workloads()[:N_PAIRS if n is None else n]
 
 
-def _solo_ipc(design: str, benches: List[str], cycles=CYCLES) -> Dict[str, float]:
-    stats = run_batch(design, [(b, None) for b in benches], cycles=cycles)
-    return {b: float(s["ipc"][0]) for b, s in zip(benches, stats)}
+def _mix_row(r) -> dict:
+    """One cached-JSON row from a typed MixResult (schema is pinned by the
+    existing reports/sim caches — do not rename keys)."""
+    return {
+        "pair": "_".join(r.benches), "hmr": hmr_class(r.benches),
+        "weighted_speedup": r.weighted_speedup(),
+        "max_slowdown": r.unfairness(),
+        "ipc": [a.ipc for a in r.apps],
+        "l2_tlb_hit": [a.l2_tlb_hit_rate for a in r.apps],
+        "bypass_hit": [a.bypass_hit_rate for a in r.apps],
+        "l2c_tlb_hit": r.l2c_tlb_hit_rate,
+        "walk_lat": [a.walk_lat for a in r.apps],
+        "dram_tlb_lat": [a.dram_tlb_lat for a in r.apps],
+        "dram_data_lat": [a.dram_data_lat for a in r.apps],
+    }
 
 
-def _pair_metrics(design: str, pairs, solo: Dict[str, float], cycles=CYCLES):
-    stats = run_batch(design, pairs, cycles=cycles)
-    rows = []
-    for (a, b), s in zip(pairs, stats):
-        ws = s["ipc"][0] / max(solo[a], 1e-9) + s["ipc"][1] / max(solo[b], 1e-9)
-        ms = max(solo[a] / max(s["ipc"][0], 1e-9),
-                 solo[b] / max(s["ipc"][1], 1e-9))
-        rows.append({
-            "pair": f"{a}_{b}", "hmr": hmr_class((a, b)),
-            "weighted_speedup": float(ws), "max_slowdown": float(ms),
-            "ipc": [float(x) for x in s["ipc"]],
-            "l2_tlb_hit": [float(x) for x in s["l2_hit_rate"]],
-            "bypass_hit": [float(x) for x in s["byp_hit_rate"]],
-            "l2c_tlb_hit": float(s["l2c_tlb_hit_rate"]),
-            "walk_lat": [float(x) for x in s["walk_lat"]],
-            "dram_tlb_lat": [float(x) for x in s["dram_tlb_lat"]],
-            "dram_data_lat": [float(x) for x in s["dram_data_lat"]],
-        })
-    return rows
-
-
-def _design_data(design: str, n_pairs=N_PAIRS, cycles=CYCLES, force=False):
+def _design_data(design: str, n_pairs=None, cycles=None, force=False):
+    # None defaults resolve to the module globals at CALL time, so
+    # `pr.CYCLES = 800; pr.N_PAIRS = 2` shrinks a smoke run in-process
+    n_pairs = N_PAIRS if n_pairs is None else n_pairs
+    cycles = CYCLES if cycles is None else cycles
     pairs = _pairs(n_pairs)
-    benches = sorted({b for p in pairs for b in p})
 
     def compute():
-        solo = _solo_ipc(design, benches, cycles)
-        return {"solo": solo,
-                "pairs": _pair_metrics(design, pairs, solo, cycles)}
+        res = Experiment(design, pairs, cycles).run()
+        solo = {b: ipc for (b, _n), ipc in res.solo_ipc.items()}
+        return {"solo": solo, "pairs": [_mix_row(r) for r in res]}
 
-    return _cache(f"design_{design}_{n_pairs}p", compute, force)
+    # non-default cycle counts get their own cache files so a shrunken
+    # smoke run can never serve (or be served) full-length results
+    tag = "" if cycles == 60_000 else f"_{cycles}c"
+    return _cache(f"design_{design}_{n_pairs}p{tag}", compute, force)
 
 
-def _sweep(designs, n_pairs=N_PAIRS, cycles=CYCLES, force=False):
+def _sweep(designs, n_pairs=None, cycles=None, force=False):
     return {d: _design_data(d, n_pairs, cycles, force) for d in designs}
 
 
@@ -206,27 +202,24 @@ SCALE_MIXES = {
 
 def fig20(force=False):
     """Scalability with concurrent app count: mean weighted speedup for
-    N = 2 (main sweep) and N = 3, 4 (run_batch over N-app mixes)."""
+    N = 2 (main sweep) and N = 3, 4 (one Experiment over N-app mixes).
+
+    IPC_alone is taken at the SAME 1/n core share (app + n-1 idle
+    partners): a half-GPU solo would deflate every ratio by the
+    core-share mismatch, not by memory contention — Experiment.run's
+    solo baselines do exactly this."""
 
     def compute():
         out = {}
+        mixes_3plus = [m for _, ms in sorted(SCALE_MIXES.items()) for m in ms]
         for d in ("gpu-mmu", "mask", "ideal"):
             data = _sweep([d])
             per_n = {"2": float(np.mean(
                 [r["weighted_speedup"] for r in data[d]["pairs"]]))}
-            for n, mixes in sorted(SCALE_MIXES.items()):
-                # IPC_alone at the SAME 1/n core share: app + n-1 idle
-                # partners (a half-GPU solo would deflate every ratio by
-                # the core-share mismatch, not by memory contention)
-                benches = sorted({b for m in mixes for b in m})
-                solo_runs = run_batch(
-                    d, [(b,) + (None,) * (n - 1) for b in benches],
-                    cycles=CYCLES)
-                solo = {b: float(s["ipc"][0])
-                        for b, s in zip(benches, solo_runs)}
-                stats = run_batch(d, mixes, cycles=CYCLES)
-                ws = [sum(s["ipc"][j] / max(solo[m[j]], 1e-9)
-                          for j in range(n)) for m, s in zip(mixes, stats)]
+            res = Experiment(d, mixes_3plus, cycles=CYCLES).run()
+            for n in sorted(SCALE_MIXES):
+                ws = [r.weighted_speedup() for r in res
+                      if len(r.benches) == n]
                 per_n[str(n)] = float(np.mean(ws))
             out[d] = per_n
         return out

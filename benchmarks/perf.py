@@ -1,0 +1,109 @@
+"""Simulator throughput microbenchmark -> BENCH_sim.json.
+
+Measures steps/sec of the compiled one-cycle pipeline in three shapes:
+
+  2app    — one 2-app mix (the paper's pair setting)
+  4app    — one 4-app mix (N-way sharing)
+  batch8  — eight 2-app mixes vmapped through one executable
+
+The three scenarios are interleaved round-robin inside ONE process and
+the median per-scenario rate is reported: this box's absolute throughput
+drifts with neighbor load, so sequential before/after blocks are not
+comparable — interleaving keeps the scenarios under the same drift, and
+the recorded JSON gives future PRs a perf trajectory (compare ratios
+between scenarios / versions, not absolute steps/sec across days).
+
+Run:  PYTHONPATH=src python -m benchmarks.perf [--cycles N] [--rounds R]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import platform
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim.config import SimConfig
+from repro.sim.runner import _compiled_batch_run, _compiled_run, _mix_matrix
+from repro.sim.workloads import mix_workloads, pair_workloads
+
+OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
+
+
+def _scenarios(design: str, cycles: int):
+    """name -> (zero-arg compiled call, sim-steps per call)."""
+    from repro.core.design import get_design
+    d = get_design(design)
+
+    def single(benches):
+        cfg = SimConfig(n_apps=len(benches), sim_cycles=cycles, design=d)
+        pm = jnp.asarray(_mix_matrix(benches))
+        fn = _compiled_run(cfg)
+        return (lambda: jax.block_until_ready(fn(pm))), cycles
+
+    def batch(mixes):
+        cfg = SimConfig(n_apps=len(mixes[0]), sim_cycles=cycles, design=d)
+        pm = jnp.asarray(np.stack([_mix_matrix(m) for m in mixes]))
+        fn = _compiled_batch_run(cfg)
+        return (lambda: jax.block_until_ready(fn(pm))), cycles * len(mixes)
+
+    mix4 = mix_workloads(seed=7, n_mixes=1, n_apps=4)[0]
+    return {
+        "2app": single(["3DS", "BLK"]),
+        "4app": single(list(mix4)),
+        "batch8": batch(pair_workloads()[:8]),
+    }
+
+
+def run_bench(design: str = "mask", cycles: int = 8_000, rounds: int = 5,
+              out_path: Path = OUT_PATH) -> dict:
+    scen = _scenarios(design, cycles)
+    for name, (call, _) in scen.items():   # compile + warm
+        t0 = time.perf_counter()
+        call()
+        print(f"# warm {name}: {time.perf_counter() - t0:.1f}s", flush=True)
+
+    samples = {name: [] for name in scen}
+    for r in range(rounds):                # interleaved measurement
+        for name, (call, steps) in scen.items():
+            t0 = time.perf_counter()
+            call()
+            dt = time.perf_counter() - t0
+            samples[name].append(steps / dt)
+        print(f"# round {r + 1}/{rounds} done", flush=True)
+
+    result = {
+        "design": design,
+        "cycles": cycles,
+        "rounds": rounds,
+        "steps_per_sec": {n: float(np.median(v)) for n, v in samples.items()},
+        "samples": {n: [float(x) for x in v] for n, v in samples.items()},
+        "meta": {
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "backend": jax.default_backend(),
+        },
+    }
+    out_path.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps({k: result[k] for k in ("design", "cycles",
+                                             "steps_per_sec")}, indent=2))
+    print(f"# wrote {out_path}")
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--design", default="mask")
+    ap.add_argument("--cycles", type=int, default=8_000)
+    ap.add_argument("--rounds", type=int, default=5)
+    ap.add_argument("--out", type=Path, default=OUT_PATH)
+    args = ap.parse_args()
+    run_bench(args.design, args.cycles, args.rounds, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,10 +1,12 @@
 """Benchmark harness: one entry per paper table/figure + kernel micro-bench
 + roofline summary. Prints ``name,value,paper_value`` rows / JSON blocks.
 
-  PYTHONPATH=src python -m benchmarks.run             # paper repro suite
-  PYTHONPATH=src python -m benchmarks.run --quick     # subset (CI)
-  PYTHONPATH=src python -m benchmarks.run --kernels   # kernel micro-bench
-  PYTHONPATH=src python -m benchmarks.run --roofline  # dry-run summary
+  PYTHONPATH=src python -m benchmarks.run                 # paper repro suite
+  PYTHONPATH=src python -m benchmarks.run --quick         # subset (CI)
+  PYTHONPATH=src python -m benchmarks.run --kernels       # kernel micro-bench
+  PYTHONPATH=src python -m benchmarks.run --roofline      # dry-run summary
+  PYTHONPATH=src python -m benchmarks.run --perf          # steps/sec bench
+  PYTHONPATH=src python -m benchmarks.run --list-designs  # design registry
 """
 from __future__ import annotations
 
@@ -105,11 +107,26 @@ def run_roofline_summary():
               f"{r.get('hbm_per_device_bytes', 0)/1e9:.2f}")
 
 
+def list_designs():
+    """Print the design registry: every named point `benchmarks` can run."""
+    from repro.core.design import get_design, list_designs as _names
+    for name in _names():
+        d = get_design(name)
+        mechs = [m for m, on in (("tokens", d.tokens.enabled),
+                                 ("bypass", d.bypass.enabled),
+                                 ("dram", d.dram.enabled)) if on]
+        print(f"{name:12s} translation={d.translation.kind:13s} "
+              f"partition={d.partition.kind:6s} "
+              f"mechanisms={'+'.join(mechs) or '-'}")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--kernels", action="store_true")
     ap.add_argument("--roofline", action="store_true")
+    ap.add_argument("--perf", action="store_true")
+    ap.add_argument("--list-designs", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--force", action="store_true")
     args = ap.parse_args()
@@ -119,6 +136,13 @@ def main() -> None:
         return
     if args.roofline:
         run_roofline_summary()
+        return
+    if args.perf:
+        from benchmarks.perf import run_bench
+        run_bench()
+        return
+    if args.list_designs:
+        list_designs()
         return
     which = args.only
     if args.quick and not which:

@@ -1,7 +1,9 @@
-"""Quickstart: the three layers of the repo in ~60 seconds on CPU.
+"""Quickstart: the three layers of the repo in a few minutes on CPU.
 
 1. MASK policy objects (the paper's contribution) driving a toy TLB.
-2. The memory-hierarchy simulator: GPU-MMU vs MASK on one workload pair.
+2. The memory-hierarchy simulator via the composable design-point API:
+   registry designs, a custom `with_`-derived design, and the typed
+   `Experiment`/`sweep` façade on one workload pair.
 3. A reduced LM: one training step + one decode step through the public API.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
@@ -25,13 +27,25 @@ print("probe hits after fill:", np.asarray(hit))
 print("initial tokens (80% of warps):", np.asarray(toks.tokens))
 
 # ------------------------------------------------------------ 2. simulator
-print("\n== 2. simulator: GPU-MMU vs MASK on 3DS+BLK (short run) ==")
-from repro.sim.runner import run_batch
+print("\n== 2. simulator: design registry + Experiment on 3DS+BLK ==")
+from repro.core.design import get_design, register_design
+from repro.sim.runner import sweep
 
-for design in ("gpu-mmu", "mask"):
-    (s,) = run_batch(design, [("3DS", "BLK")], cycles=15000)
-    print(f"{design:8s} ipc={np.round(s['ipc'], 1)} "
-          f"sharedTLB hit={np.round(s['l2_hit_rate'], 2)}")
+# a custom design point: MASK with a lower initial token budget and the
+# L2 bypass disabled — composed from specs, no simulator edits needed
+my_design = get_design("mask").with_(name="mask-lean",
+                                     tokens=dict(initial_frac=0.1),
+                                     bypass=dict(enabled=False))
+register_design(my_design)
+
+# sweep = one Experiment per design; solo baselines (IPC_alone) are
+# batched into the same compile, so weighted speedup comes for free
+for res in sweep(["gpu-mmu", "mask", "mask-lean"],
+                 [("3DS", "BLK")], cycles=9000).values():
+    r = res[0]
+    print(f"{res.design.name:10s} ws={r.weighted_speedup():.2f} "
+          f"ipc={np.round(r['ipc'], 1)} "
+          f"sharedTLB hit={np.round(r['l2_hit_rate'], 2)}")
 
 # -------------------------------------------------------------- 3. tiny LM
 print("\n== 3. reduced llama3: one train step + one decode step ==")

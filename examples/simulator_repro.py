@@ -1,8 +1,9 @@
 """Reproduce the paper's headline comparison on a workload bundle.
 
-Runs all five designs (ideal / PWC / GPU-MMU / Static / MASK) on a 2-app
-bundle and prints the weighted speedup + the paper's Table-3-style TLB hit
-rates.  ~3-5 min on CPU.
+Sweeps all five designs (ideal / PWC / GPU-MMU / Static / MASK) over one
+2-app bundle through the typed `Experiment`/`sweep` façade and prints the
+weighted speedup + the paper's Table-3-style TLB hit rates.  ~3-5 min on
+CPU.
 
 Run:  PYTHONPATH=src python examples/simulator_repro.py [BENCH_A BENCH_B]
 """
@@ -10,7 +11,7 @@ import sys
 
 import numpy as np
 
-from repro.sim.runner import run_batch
+from repro.sim.runner import sweep
 from repro.sim.workloads import BENCHES
 
 a, b = (sys.argv[1:3] if len(sys.argv) >= 3 else ("3DS", "BLK"))
@@ -18,14 +19,13 @@ assert a in BENCHES and b in BENCHES, f"choose from {BENCHES}"
 CYCLES = 60_000
 
 print(f"bundle: {a}+{b}  ({CYCLES} cycles)")
-solo = {}
-for d in ("ideal", "pwc", "gpu-mmu", "static", "mask"):
-    sa, sb, sp = run_batch(d, [(a, None), (b, None), (a, b)], cycles=CYCLES)
-    ws = (sp["ipc"][0] / max(sa["ipc"][0], 1e-9)
-          + sp["ipc"][1] / max(sb["ipc"][0], 1e-9))
-    print(f"{d:8s} weighted_speedup={ws:.3f} "
-          f"sharedTLB_hit={np.round(sp['l2_hit_rate'], 3)} "
-          f"bypass_hit={np.round(sp['byp_hit_rate'], 3)} "
-          f"walk_lat={np.round(sp['walk_lat'], 0)}")
+results = sweep(["ideal", "pwc", "gpu-mmu", "static", "mask"],
+                [(a, b)], cycles=CYCLES)
+for name, res in results.items():
+    r = res[0]
+    print(f"{name:8s} weighted_speedup={r.weighted_speedup():.3f} "
+          f"sharedTLB_hit={np.round([x.l2_tlb_hit_rate for x in r.apps], 3)} "
+          f"bypass_hit={np.round([x.bypass_hit_rate for x in r.apps], 3)} "
+          f"walk_lat={np.round([x.walk_lat for x in r.apps], 0)}")
 print("\npaper: MASK ≈ +45.2% weighted speedup over GPU-MMU; "
       "shared TLB hit 49.3% -> 73.9%")

@@ -6,6 +6,12 @@
   tokens      — TLB-Fill Tokens epoch controller (§5.2)
   bypass      — TLB-request-aware L2 data-cache bypass (§5.3)
   dram_sched  — golden/silver/normal scheduler with Eq. (1) quotas (§5.4)
-  mask        — MaskConfig + named design points (ablation grid)
+  design      — composable design points: per-layer policy specs +
+                registry (register_design / get_design / list_designs)
+  mask        — legacy MaskConfig/DesignPoint + design(name) compat shims
 """
-from repro.core.mask import ALL_DESIGNS, DesignPoint, MaskConfig, design  # noqa: F401
+from repro.core.design import (BypassSpec, Design, DramSpec,  # noqa: F401
+                               PartitionSpec, TokenSpec, TranslationSpec,
+                               get_design, list_designs, register_design)
+from repro.core.mask import (ALL_DESIGNS, DesignPoint,  # noqa: F401
+                             MaskConfig, design)

@@ -1,18 +1,20 @@
-"""MASK policy bundle: configuration + composed state for the three
-mechanisms (TLB-Fill Tokens, TLB-Request-Aware L2 Bypass, Address-Space-
-Aware DRAM scheduler). Used by both the simulator (repro.sim) and the
-serving memory manager (repro.memmgr)."""
+"""Legacy MASK policy bundle + compat shims over the design registry.
+
+The canonical design-point API lives in `repro.core.design`: frozen
+per-layer policy specs composed into a registered `Design`. This module
+keeps the original flag-bag dataclasses (`MaskConfig`, `DesignPoint`) and
+the `design(name)` / `ALL_DESIGNS` entry points as bit-for-bit compatible
+shims — `design(name)` now resolves through the registry and returns a
+`Design`, whose legacy properties (`.mask`, `.use_l2_tlb`, `.ideal_tlb`,
+`.static_partition`, ...) mirror the old `DesignPoint` fields exactly.
+"""
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple
 
 import jax.numpy as jnp
 
-from repro.core import bypass as bypass_mod
-from repro.core import dram_sched
-from repro.core import tlb as tlb_mod
-from repro.core import tokens as tokens_mod
+from repro.core.design import Design, get_design  # noqa: F401
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +45,11 @@ class MaskConfig:
 
 @dataclasses.dataclass(frozen=True)
 class DesignPoint:
-    """Named baseline/design selections used across benchmarks."""
+    """Legacy flag-bag design point (pre-registry API).
+
+    Still accepted everywhere a design is taken (`SimConfig`, `run_mix`,
+    `Experiment`) — it is converted to a `repro.core.design.Design` via
+    `design.from_legacy`. New code should compose a `Design` instead."""
 
     name: str
     use_l2_tlb: bool = True          # shared L2 TLB (Fig. 2b) vs PWC (Fig. 2a)
@@ -70,24 +76,15 @@ def static_partition_index(index, n_resources: int, n_apps: int, app):
     return jnp.minimum(start + index % span, n_resources - 1)
 
 
-def design(name: str) -> DesignPoint:
-    base_off = MaskConfig(tlb_tokens=False, l2_bypass=False, dram_sched=False)
-    table = {
-        "ideal": DesignPoint("ideal", ideal_tlb=True, mask=base_off),
-        "pwc": DesignPoint("pwc", use_l2_tlb=False, use_pwc=True,
-                           mask=base_off),
-        "gpu-mmu": DesignPoint("gpu-mmu", mask=base_off),
-        "static": DesignPoint("static", static_partition=True, mask=base_off),
-        "mask": DesignPoint("mask", mask=MaskConfig()),
-        "mask-tlb": DesignPoint("mask-tlb", mask=MaskConfig(
-            tlb_tokens=True, l2_bypass=False, dram_sched=False)),
-        "mask-cache": DesignPoint("mask-cache", mask=MaskConfig(
-            tlb_tokens=False, l2_bypass=True, dram_sched=False)),
-        "mask-dram": DesignPoint("mask-dram", mask=MaskConfig(
-            tlb_tokens=False, l2_bypass=False, dram_sched=True)),
-    }
-    return table[name]
+def design(name: str) -> Design:
+    """Compat shim: the named design points, now served by the registry.
+
+    Returns the registered `Design`; its legacy view properties reproduce
+    the old `DesignPoint` fields, and simulation results are bit-for-bit
+    identical to the pre-registry table (pinned by tests)."""
+    return get_design(name)
 
 
+# the paper's named designs (the registry may hold user designs beyond these)
 ALL_DESIGNS = ("ideal", "pwc", "gpu-mmu", "static", "mask",
                "mask-tlb", "mask-cache", "mask-dram")

@@ -10,7 +10,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Tuple
 
-from repro.core.mask import DesignPoint, MaskConfig, design
+from repro.core.design import Design, as_design, get_design
 
 
 @dataclasses.dataclass(frozen=True)
@@ -33,14 +33,17 @@ class SimConfig:
     lat_l2_cache: int = 10
     lat_l1_data: int = 1
     sim_cycles: int = 60_000
-    design: DesignPoint = dataclasses.field(
-        default_factory=lambda: design("gpu-mmu"))
+    # a repro.core.design.Design; a name or legacy DesignPoint is coerced
+    design: Design = dataclasses.field(
+        default_factory=lambda: get_design("gpu-mmu"))
 
     def __post_init__(self):
         if not 1 <= self.n_apps <= self.n_cores:
             raise ValueError(
                 f"n_apps must be in [1, n_cores={self.n_cores}], "
                 f"got {self.n_apps}")
+        if not isinstance(self.design, Design):
+            object.__setattr__(self, "design", as_design(self.design))
 
     @property
     def total_warps(self) -> int:

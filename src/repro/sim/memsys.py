@@ -15,9 +15,13 @@ result NamedTuple so every layer is individually unit-testable:
   accumulate_stats  -- per-app counters behind the paper's tables/figures.
 
 `step` is a thin composition of those stages plus warp retire and epoch
-maintenance. Every design point of the paper (ideal / PWC / GPU-MMU /
-Static / MASK±components) is this same pipeline with different switches,
-and `n_apps` is arbitrary — the paper's 2-app pairs are just N=2.
+maintenance. Every design point (ideal / PWC / GPU-MMU / Static /
+MASK±components, plus any user-registered composition) is this same
+pipeline dispatched by the per-layer policy specs of
+`repro.core.design.Design` — stages read `cfg.design.translation` /
+`.partition` / `.tokens` / `.bypass` / `.dram` (static, jit-hashable)
+and never ad-hoc flag bags — and `n_apps` is arbitrary: the paper's
+2-app pairs are just N=2.
 
 All translation caches (L1 bank, L2 TLB, bypass cache, PWC, and the
 line-addressed L2 data cache) share `core/tlb.py`'s probe/fill machinery;
@@ -42,9 +46,10 @@ from repro.core.page_table import _mix
 from repro.sim.config import SimConfig
 from repro.sim.workloads import FIELD, gen_vpn
 
-WALK_TABLE = 64          # concurrent page walks (Table 1)
 DATA_WIDTH = 4           # divergent cache lines per memory instruction
 BIG = jnp.int32(1 << 30)
+# the concurrent-page-walk table size (Table 1: 64) comes from
+# cfg.design.translation.max_concurrent_walks
 
 
 # ---------------------------------------------------------------------------
@@ -57,10 +62,10 @@ class TransState(NamedTuple):
     l2tlb: tlb_mod.TLBState
     bypass_tlb: tlb_mod.TLBState
     pwc: tlb_mod.TLBState        # page-walk cache (PTE lines)
-    walk_vpn: jax.Array          # (WALK_TABLE,) int32
-    walk_asid: jax.Array         # (WALK_TABLE,) int32
-    walk_done: jax.Array         # (WALK_TABLE,) int32 completion time
-    walk_merged: jax.Array       # (WALK_TABLE,) int32 warps merged onto walk
+    walk_vpn: jax.Array          # (max_concurrent_walks,) int32
+    walk_asid: jax.Array         # (max_concurrent_walks,) int32
+    walk_done: jax.Array         # (max_concurrent_walks,) completion time
+    walk_merged: jax.Array       # (max_concurrent_walks,) warps merged on
 
 
 class DataState(NamedTuple):
@@ -103,18 +108,20 @@ class SimState(NamedTuple):
 
 
 def init_trans(cfg: SimConfig) -> TransState:
-    m = cfg.design.mask
+    tr = cfg.design.translation
+    tok = cfg.design.tokens
+    wt = tr.max_concurrent_walks
     z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
     return TransState(
-        l1=tlb_mod.init_bank(cfg.n_cores, m.l1_tlb_entries, m.l1_tlb_entries),
-        l2tlb=tlb_mod.init(m.l2_tlb_entries, m.l2_tlb_ways),
-        bypass_tlb=tlb_mod.init(m.bypass_cache_entries,
-                                m.bypass_cache_entries),
+        l1=tlb_mod.init_bank(cfg.n_cores, tr.l1_entries, tr.l1_entries),
+        l2tlb=tlb_mod.init(tr.l2_entries, tr.l2_ways),
+        bypass_tlb=tlb_mod.init(tok.bypass_cache_entries,
+                                tok.bypass_cache_entries),
         pwc=tlb_mod.init(cfg.pwc_entries, cfg.pwc_ways),
-        walk_vpn=jnp.full((WALK_TABLE,), -1, jnp.int32),
-        walk_asid=jnp.full((WALK_TABLE,), -1, jnp.int32),
-        walk_done=z(WALK_TABLE),
-        walk_merged=z(WALK_TABLE),
+        walk_vpn=jnp.full((wt,), -1, jnp.int32),
+        walk_asid=jnp.full((wt,), -1, jnp.int32),
+        walk_done=z(wt),
+        walk_merged=z(wt),
     )
 
 
@@ -152,7 +159,7 @@ def init_state(cfg: SimConfig) -> SimState:
         data=init_data(cfg),
         tokens=tok_mod.init(cfg.n_apps,
                             jnp.asarray(cfg.warps_per_app, jnp.int32),
-                            cfg.design.mask.initial_token_frac),
+                            cfg.design.tokens.initial_frac),
         stats=init_stats(cfg.n_apps),
     )
 
@@ -201,7 +208,7 @@ def _l2_cache_access(cfg: SimConfig, l2c, dram, line, app, is_tlb,
     Returns (l2c', dram', latency, l2_hit). `may_fill` implements the MASK
     L2 bypass decision; `static_split` gives each app an equal slice of the
     sets/channels by restricting its index range (Static design)."""
-    m = cfg.design.mask
+    dr = cfg.design.dram
     key = jnp.where(static_split,
                     static_partition_index(line, cfg.l2_sets, cfg.n_apps,
                                            app),
@@ -220,7 +227,7 @@ def _l2_cache_access(cfg: SimConfig, l2c, dram, line, app, is_tlb,
     row = (line // (cfg.n_channels * cfg.n_banks * 32)).astype(jnp.int32)
     dram, dlat = dram_sched.access(
         dram, channel, bank, row, app, is_tlb, miss,
-        mask_enabled=m.dram_sched, thres_max=m.thres_max)
+        mask_enabled=dr.enabled, thres_max=dr.thres_max)
     lat = lat + jnp.where(miss, cfg.lat_l2_cache + dlat, 0)
     l2c = tlb_mod.fill(l2c, line * cfg.l2_sets + key, zero,
                        miss & may_fill, t)
@@ -252,23 +259,31 @@ class TransOut(NamedTuple):
 def translation(cfg: SimConfig, trans: TransState, data: DataState,
                 tokens: tok_mod.TokenState, sched: SchedOut, t
                 ) -> Tuple[TransState, DataState, TransOut]:
-    """Translate one request per core through the full TLB hierarchy."""
-    m = cfg.design.mask
+    """Translate one request per core through the full TLB hierarchy.
+
+    Dispatch is by the translation/tokens/bypass policy specs: the
+    spec fields are static Python values, so each design compiles to a
+    specialized pipeline with the unused paths traced out."""
+    des = cfg.design
+    tr = des.translation
+    ideal = tr.kind == "ideal"
+    use_pwc = tr.kind == "pwc"
+    use_l2tlb = tr.kind == "shared_l2_tlb"
+    tokens_on = des.tokens.enabled
     C = cfg.n_cores
     vpn, asid, active = sched.vpn, sched.asid, sched.active
 
     # ---------------- L1 TLB bank --------------------------------------
     l1, l1_hit = tlb_mod.probe_bank(trans.l1, vpn, asid, active, t)
-    if cfg.design.ideal_tlb:
+    if ideal:
         l1_hit = active
     l1_miss = active & ~l1_hit
 
     # ---------------- shared L2 TLB + bypass cache ---------------------
-    use_l2tlb = cfg.design.use_l2_tlb and not cfg.design.ideal_tlb
     l2tlb, byp_tlb = trans.l2tlb, trans.bypass_tlb
     if use_l2tlb:
         l2tlb, l2_hit = tlb_mod.probe(l2tlb, vpn, asid, l1_miss, t)
-        if m.tlb_tokens:
+        if tokens_on:
             byp_tlb, byp_hit = tlb_mod.probe(byp_tlb, vpn, asid,
                                              l1_miss & ~l2_hit, t)
             l2_hit_eff = l2_hit | byp_hit
@@ -294,32 +309,33 @@ def translation(cfg: SimConfig, trans: TransState, data: DataState,
 
     new_walk = need_walk & ~merged
     n_live = (trans.walk_done > t).sum()
-    # walker occupancy queue penalty (64 walker threads)
-    over = jnp.maximum(n_live + jnp.cumsum(new_walk) - WALK_TABLE, 0)
+    # walker occupancy queue penalty (finite walker threads)
+    wt = tr.max_concurrent_walks
+    over = jnp.maximum(n_live + jnp.cumsum(new_walk) - wt, 0)
     queue_pen = over * 30
 
     pte_lines = pt_mod.pte_line_addresses(
-        pt_mod.PageTableConfig(levels=m.walk_levels), asid, vpn)  # (C, L)
+        pt_mod.PageTableConfig(levels=tr.walk_levels), asid, vpn)  # (C, L)
 
     walk_lat = jnp.zeros((C,), jnp.int32)
     dram_tlb_lat = jnp.zeros((C,), jnp.float32)
     dram_tlb_n = jnp.zeros((C,), jnp.int32)
     l2c, dram, bp_state = data.l2c, data.dram, data.bypass
     pwc = trans.pwc
-    static = jnp.asarray(cfg.design.static_partition)
+    static = jnp.asarray(des.partition.kind == "static")
     l2c_hit = l2c_probe = jnp.zeros((), jnp.int32)
-    for lvl in range(m.walk_levels):
+    for lvl in range(tr.walk_levels):
         line = pte_lines[:, lvl]
         lvl_active = new_walk
         depth_tag = jnp.full((C,), pt_mod.walk_depth_tag(lvl), jnp.int32)
-        if cfg.design.use_pwc:
+        if use_pwc:
             pwc, pwc_hit = tlb_mod.probe(pwc, line, asid * 0, lvl_active, t)
             pwc = tlb_mod.fill(pwc, line, asid * 0, lvl_active & ~pwc_hit, t)
             go_l2 = lvl_active & ~pwc_hit
             walk_lat = walk_lat + jnp.where(lvl_active & pwc_hit, 5, 0)
         else:
             go_l2 = lvl_active
-        if m.l2_bypass:
+        if des.bypass.enabled:
             may_fill = bp_mod.should_fill(bp_state, depth_tag)
         else:
             may_fill = jnp.ones((C,), bool)
@@ -340,13 +356,13 @@ def translation(cfg: SimConfig, trans: TransState, data: DataState,
     # install new walks into free slots (expired entries are free)
     free = trans.walk_done <= t
     order_slots = jnp.cumsum(new_walk) - 1
-    free_idx = jnp.where(free, jnp.arange(WALK_TABLE), BIG)
+    free_idx = jnp.where(free, jnp.arange(wt), BIG)
     free_sorted = jnp.sort(free_idx)
     slot_for = jnp.where(new_walk,
-                         free_sorted[jnp.clip(order_slots, 0, WALK_TABLE - 1)],
+                         free_sorted[jnp.clip(order_slots, 0, wt - 1)],
                          BIG)
-    can_install = slot_for < WALK_TABLE
-    slot_safe = jnp.clip(slot_for, 0, WALK_TABLE - 1).astype(jnp.int32)
+    can_install = slot_for < wt
+    slot_safe = jnp.clip(slot_for, 0, wt - 1).astype(jnp.int32)
     inst = new_walk & can_install
     walk_vpn = trans.walk_vpn.at[slot_safe].set(
         jnp.where(inst, vpn, trans.walk_vpn[slot_safe]))
@@ -367,12 +383,12 @@ def translation(cfg: SimConfig, trans: TransState, data: DataState,
         jnp.where(l2_hit_eff, cfg.lat_l2_tlb,
                   jnp.where(merged, jnp.maximum(merge_done - t, 1),
                             jnp.maximum(walk_done_new - t, 1))))
-    if cfg.design.ideal_tlb:
+    if ideal:
         trans_lat = jnp.where(active, cfg.lat_l1_tlb, 0)
 
     # ---------------- TLB fills on walk return -------------------------
     if use_l2tlb:
-        if m.tlb_tokens:
+        if tokens_on:
             # tokens are distributed round-robin over the app's cores in
             # warpID order: per-core allowance = tokens / cores_per_app
             cores_per_app = jnp.asarray(cfg.cores_per_app, jnp.int32)
@@ -418,7 +434,7 @@ def datapath(cfg: SimConfig, data: DataState, params_mat, sched: SchedOut, t
     """Data access for the translated request (after the TLB hierarchy)."""
     C = cfg.n_cores
     l2c, dram, bp_state = data.l2c, data.dram, data.bypass
-    static = jnp.asarray(cfg.design.static_partition)
+    static = jnp.asarray(cfg.design.partition.kind == "static")
 
     pfn = pt_mod.translate(pt_mod.PageTableConfig(), sched.asid, sched.vpn)
     r = _mix(pfn.astype(jnp.uint32) + sched.pos.astype(jnp.uint32))
@@ -507,7 +523,7 @@ def epoch_maintenance(cfg: SimConfig, trans: TransState,
     `trans` must be the PRE-update translation state: the walk table is
     sampled before this cycle's installs, matching the paper's epoch-end
     census of in-flight walks."""
-    m = cfg.design.mask
+    des = cfg.design
     na = cfg.n_apps
 
     def do_epoch(args):
@@ -521,12 +537,14 @@ def epoch_maintenance(cfg: SimConfig, trans: TransState,
             trans.walk_merged * (trans.walk_done > t))
         dram = dram_sched.update_pressure(dram, conc, stalled)
         return (tok_mod.epoch_update(tokens, warps_per_app,
-                                     step_frac=m.token_step_frac), dram,
+                                     step_frac=des.tokens.step_frac), dram,
                 bp_mod.epoch_update(bp))
 
-    is_epoch = (t % m.epoch_cycles) == 0
+    any_adaptive = (des.tokens.enabled or des.dram.enabled
+                    or des.bypass.enabled)
+    is_epoch = (t % des.epoch_cycles) == 0
     tokens, dram, bp_state = jax.lax.cond(
-        is_epoch & jnp.asarray(m.tlb_tokens or m.dram_sched or m.l2_bypass),
+        is_epoch & jnp.asarray(any_adaptive),
         do_epoch, lambda args: args, (tokens, data.dram, data.bypass))
     return tokens, data._replace(dram=dram, bypass=bp_state)
 

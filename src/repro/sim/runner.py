@@ -1,27 +1,43 @@
-"""Simulation runner: N-app mixes, solo/pair wrappers, design sweeps,
-metric extraction.
+"""Simulation runner: N-app mixes, solo/pair wrappers, typed experiments.
 
-`run_mix(design, benches)` is the primary entry point: it co-runs
-len(benches) applications (None entries are idle partners) and returns
-per-app stats. `run_pair` / `run_solo` are thin 2-app wrappers kept for
-the paper's pair-based experiments; `run_batch` vmaps many same-size
-mixes through one compile.
+Two API levels share one compiled core:
+
+* Raw: `run_mix(design, benches)` co-runs len(benches) applications (None
+  entries are idle partners) and returns a per-app stats dict.
+  `run_pair` / `run_solo` are thin 2-app wrappers kept for the paper's
+  pair-based experiments; `run_batch` vmaps many same-size mixes through
+  one compile. `design` is a registered name, a `repro.core.design.Design`
+  (including user-registered or ad-hoc compositions), or a legacy
+  `DesignPoint`.
+
+* Typed: `Experiment(design, mixes, cycles).run()` returns an
+  `ExperimentResult` of `MixResult`/`AppStats` objects with the derived
+  metrics (weighted speedup, unfairness, per-app hit rates) as
+  methods/properties; `sweep(designs, mixes)` drives many designs,
+  batching one compile per (design, n_apps).
+
+Compiled executables are lru-cached on the full `SimConfig` — the
+embedded `Design` hashes over every policy-spec field, so two designs
+that differ in any spec never collide, even under the same name.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.mask import design
+from repro.core.design import Design, as_design
 from repro.sim.config import SimConfig
 from repro.sim.memsys import SimState, init_state, step
 from repro.sim.workloads import app_matrix
 
 jax.config.update("jax_enable_x64", False)
+
+DesignLike = Union[str, Design]  # legacy DesignPoint also accepted
 
 
 @functools.lru_cache(maxsize=64)
@@ -70,11 +86,12 @@ def _stats(cfg: SimConfig, st: SimState) -> Dict[str, np.ndarray]:
         / np.maximum(g(s.s_dram_data_n), 1),
         "dram_tlb_n": g(s.s_dram_tlb_n),
         "dram_data_n": g(s.s_dram_data_n),
-        # L2 data-cache hit rate for TLB requests (Table 5)
+        # L2 data-cache hit rate for TLB requests (Table 5). np.maximum
+        # (not builtin max) so these survive the counters going per-app.
         "l2c_tlb_hit_rate": (g(s.s_l2c_tlb_hit)
-                             / max(g(s.s_l2c_tlb_probe), 1)),
+                             / np.maximum(g(s.s_l2c_tlb_probe), 1)),
         "l2c_data_hit_rate": (g(s.s_l2c_data_hit)
-                              / max(g(s.s_l2c_data_probe), 1)),
+                              / np.maximum(g(s.s_l2c_data_probe), 1)),
         "tokens": np.asarray(st.tokens.tokens),
         "cycles": float(st.t),
     }
@@ -85,7 +102,7 @@ def _mix_matrix(benches: Sequence[Optional[str]]) -> np.ndarray:
     return app_matrix(list(benches))
 
 
-def run_mix(design_name: str, benches: Sequence[Optional[str]],
+def run_mix(design: DesignLike, benches: Sequence[Optional[str]],
             cycles: int = 60_000) -> Dict:
     """Co-run N apps under a design; returns per-app stats.
 
@@ -94,13 +111,13 @@ def run_mix(design_name: str, benches: Sequence[Optional[str]],
     contention from the partner slots).
     """
     cfg = SimConfig(n_apps=len(benches), sim_cycles=cycles,
-                    design=design(design_name))
+                    design=as_design(design))
     pm = jnp.asarray(_mix_matrix(benches))
     st = _compiled_run(cfg)(pm)
     return _stats(cfg, st)
 
 
-def run_batch(design_name: str,
+def run_batch(design: DesignLike,
               bench_mixes: Sequence[Tuple[Optional[str], ...]],
               cycles: int = 60_000) -> List[Dict]:
     """Run many same-size workload mixes at once (vmap). An entry may
@@ -109,7 +126,7 @@ def run_batch(design_name: str,
     if len(sizes) != 1:
         raise ValueError(f"all mixes must have the same size, got {sizes}")
     cfg = SimConfig(n_apps=sizes.pop(), sim_cycles=cycles,
-                    design=design(design_name))
+                    design=as_design(design))
     pm = jnp.asarray(np.stack([_mix_matrix(m) for m in bench_mixes]))
     final = _compiled_batch_run(cfg)(pm)
     out = []
@@ -119,16 +136,16 @@ def run_batch(design_name: str,
     return out
 
 
-def run_pair(design_name: str, bench_a: str, bench_b: str,
+def run_pair(design: DesignLike, bench_a: str, bench_b: str,
              cycles: int = 60_000) -> Dict:
     """Co-run two apps under a design; returns per-app stats."""
-    return run_mix(design_name, [bench_a, bench_b], cycles)
+    return run_mix(design, [bench_a, bench_b], cycles)
 
 
-def run_solo(design_name: str, bench: str, cycles: int = 60_000) -> Dict:
+def run_solo(design: DesignLike, bench: str, cycles: int = 60_000) -> Dict:
     """IPC_alone: same core count as in the shared run (paper §6),
     exclusive memory system — emulated by pairing with an idle app."""
-    return run_mix(design_name, [bench, None], cycles)
+    return run_mix(design, [bench, None], cycles)
 
 
 def weighted_speedup(mix_stats, *solos) -> float:
@@ -141,3 +158,210 @@ def max_slowdown(mix_stats, *solos) -> float:
     """Unfairness: worst per-app IPC_alone / IPC over the mix (any N)."""
     return float(max(s["ipc"][0] / max(mix_stats["ipc"][i], 1e-9)
                      for i, s in enumerate(solos)))
+
+
+# ---------------------------------------------------------------------------
+# typed results layer
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class AppStats:
+    """One application's slice of a mix run. `ipc_alone` is the §6
+    IPC_alone baseline (same core share, idle partners) when the
+    experiment computed solo baselines, else None."""
+
+    bench: Optional[str]          # None = idle partner slot
+    index: int                    # position in the mix
+    ipc: float
+    ipc_alone: Optional[float]
+    l1_tlb_hit_rate: float
+    l2_tlb_hit_rate: float        # shared L2 TLB (Table 3)
+    bypass_hit_rate: float        # token bypass cache (Table 4)
+    walk_lat: float               # mean page-walk latency (cycles)
+    walks: float
+    stalls_per_miss: float
+    dram_tlb_lat: float           # mean DRAM latency, walk requests
+    dram_data_lat: float          # mean DRAM latency, data requests
+    tokens: int                   # final TLB-fill token count
+
+    @property
+    def speedup(self) -> float:
+        """IPC / IPC_alone (this app's weighted-speedup contribution)."""
+        if self.ipc_alone is None:
+            raise ValueError("run the experiment with solo baselines")
+        return self.ipc / max(self.ipc_alone, 1e-9)
+
+    @property
+    def slowdown(self) -> float:
+        """IPC_alone / IPC (this app's unfairness contribution)."""
+        if self.ipc_alone is None:
+            raise ValueError("run the experiment with solo baselines")
+        return self.ipc_alone / max(self.ipc, 1e-9)
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class MixResult:
+    """One mix under one design: per-app `AppStats` + mix-level metrics.
+    The raw stats dict stays reachable via `.raw` / `res[key]`."""
+
+    design: Design
+    benches: Tuple[Optional[str], ...]
+    cycles: int
+    apps: Tuple[AppStats, ...]
+    raw: Mapping[str, np.ndarray]
+
+    def __getitem__(self, key: str):
+        return self.raw[key]
+
+    def app(self, bench: str) -> AppStats:
+        """First AppStats running `bench` (mixes may repeat a bench)."""
+        for a in self.apps:
+            if a.bench == bench:
+                return a
+        raise KeyError(f"{bench!r} not in mix {self.benches}")
+
+    @property
+    def real_apps(self) -> Tuple[AppStats, ...]:
+        """Apps excluding idle-partner (None) slots."""
+        return tuple(a for a in self.apps if a.bench is not None)
+
+    @property
+    def l2c_tlb_hit_rate(self) -> float:
+        """L2 data-cache hit rate for TLB (walk) requests (Table 5)."""
+        return float(self.raw["l2c_tlb_hit_rate"])
+
+    @property
+    def l2c_data_hit_rate(self) -> float:
+        return float(self.raw["l2c_data_hit_rate"])
+
+    def weighted_speedup(self) -> float:
+        """Sum of IPC / IPC_alone over the real apps (paper Eq. WS)."""
+        return float(sum(a.speedup for a in self.real_apps))
+
+    def unfairness(self) -> float:
+        """Max per-app slowdown over the real apps (paper max slowdown)."""
+        return float(max(a.slowdown for a in self.real_apps))
+
+    max_slowdown = unfairness
+
+
+@dataclasses.dataclass(frozen=True, eq=False)
+class ExperimentResult:
+    """All mixes of one `Experiment`, aligned with its mix list."""
+
+    design: Design
+    cycles: int
+    results: Tuple[MixResult, ...]
+    solo_ipc: Mapping[Tuple[str, int], float]  # (bench, n_apps) -> IPC_alone
+
+    def __iter__(self):
+        return iter(self.results)
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def __getitem__(self, i) -> MixResult:
+        return self.results[i]
+
+    def mean_weighted_speedup(self) -> float:
+        return float(np.mean([r.weighted_speedup() for r in self.results]))
+
+    def mean_unfairness(self) -> float:
+        return float(np.mean([r.unfairness() for r in self.results]))
+
+
+@dataclasses.dataclass(frozen=True)
+class Experiment:
+    """Typed façade over `run_batch`: a design × a list of mixes.
+
+    `design` may be a registered name, a `Design`, or a legacy
+    `DesignPoint`; `mixes` entries are bench tuples (a bare bench name
+    means a 1-app run; None entries are idle partners). Mixes of
+    different sizes are allowed — each (design, n_apps) group is one
+    vmapped compile, with the solo baselines batched into the same call.
+
+        exp = Experiment("mask", [("3DS", "BLK"), ("MUM", "RED")])
+        res = exp.run()
+        res.mean_weighted_speedup()
+        res[0].app("3DS").l2_tlb_hit_rate
+    """
+
+    design: DesignLike
+    mixes: Tuple[Tuple[Optional[str], ...], ...]
+    cycles: int = 60_000
+
+    def __post_init__(self):
+        object.__setattr__(self, "design", as_design(self.design))
+        if isinstance(self.mixes, str):
+            raise TypeError(
+                f"mixes must be a sequence of mixes, got the bare string "
+                f"{self.mixes!r} — did you mean [({self.mixes!r},)]?")
+        norm = tuple((m,) if isinstance(m, str) else tuple(m)
+                     for m in self.mixes)
+        if not norm:
+            raise ValueError("Experiment needs at least one mix")
+        object.__setattr__(self, "mixes", norm)
+
+    def run(self, solo_baselines: bool = True) -> ExperimentResult:
+        by_n: Dict[int, List[Tuple[int, Tuple[Optional[str], ...]]]] = {}
+        for i, m in enumerate(self.mixes):
+            by_n.setdefault(len(m), []).append((i, m))
+
+        results: List[Optional[MixResult]] = [None] * len(self.mixes)
+        solo_ipc: Dict[Tuple[str, int], float] = {}
+        for n, items in sorted(by_n.items()):
+            mixes = [m for _, m in items]
+            benches = sorted({b for m in mixes for b in m
+                              if b is not None}) if solo_baselines else []
+            # a user mix that IS the canonical solo shape (bench + idle
+            # partners) doubles as its own baseline — don't simulate twice
+            solo_shaped = {m for m in mixes
+                           if m[0] is not None and not any(m[1:])}
+            solo_mixes = [(b,) + (None,) * (n - 1) for b in benches]
+            solo_mixes = [sm for sm in solo_mixes if sm not in solo_shaped]
+            # one compile per (design, n_apps): mixes + solos in one batch
+            stats = run_batch(self.design, mixes + solo_mixes,
+                              cycles=self.cycles)
+            for m, s in zip(mixes, stats):
+                if m in solo_shaped:
+                    solo_ipc[(m[0], n)] = float(s["ipc"][0])
+            for sm, s in zip(solo_mixes, stats[len(mixes):]):
+                solo_ipc[(sm[0], n)] = float(s["ipc"][0])
+            for (i, m), s in zip(items, stats[:len(mixes)]):
+                results[i] = self._mix_result(m, s, solo_ipc, n)
+        return ExperimentResult(design=self.design, cycles=self.cycles,
+                                results=tuple(results), solo_ipc=solo_ipc)
+
+    def _mix_result(self, benches, s, solo_ipc, n) -> MixResult:
+        apps = tuple(
+            AppStats(
+                bench=b, index=i,
+                ipc=float(s["ipc"][i]),
+                ipc_alone=solo_ipc.get((b, n)),
+                l1_tlb_hit_rate=float(s["l1_hit_rate"][i]),
+                l2_tlb_hit_rate=float(s["l2_hit_rate"][i]),
+                bypass_hit_rate=float(s["byp_hit_rate"][i]),
+                walk_lat=float(s["walk_lat"][i]),
+                walks=float(s["walks"][i]),
+                stalls_per_miss=float(s["stalls_per_miss"][i]),
+                dram_tlb_lat=float(s["dram_tlb_lat"][i]),
+                dram_data_lat=float(s["dram_data_lat"][i]),
+                tokens=int(s["tokens"][i]),
+            ) for i, b in enumerate(benches))
+        return MixResult(design=self.design, benches=tuple(benches),
+                         cycles=self.cycles, apps=apps, raw=s)
+
+
+def sweep(designs: Sequence[DesignLike],
+          mixes: Sequence, cycles: int = 60_000,
+          solo_baselines: bool = True) -> Dict[str, ExperimentResult]:
+    """Run several designs over the same mixes: one `Experiment` per
+    design (so one compile per (design, n_apps)), keyed by design name."""
+    out: Dict[str, ExperimentResult] = {}
+    for d in designs:
+        dd = as_design(d)
+        if dd.name in out:
+            raise ValueError(f"duplicate design name in sweep: {dd.name!r}")
+        out[dd.name] = Experiment(dd, tuple(mixes), cycles).run(
+            solo_baselines=solo_baselines)
+    return out

@@ -297,3 +297,128 @@ def test_run_mix_three_apps_under_jit():
     assert np.all(s["ipc"] > 0)
     for k, v in s.items():
         assert np.all(np.isfinite(np.asarray(v, np.float64))), k
+
+
+# ------------------------------------------- design(name) compat vs goldens
+
+# Pre-redesign golden stats for the pinned mix 3DS+BLK, captured at commit
+# 7ae6958 (the last flag-bag DesignPoint implementation of core/mask.py)
+# on this container's jax/XLA CPU build. float.hex() encoding keeps the
+# comparison bit-for-bit, not approximate. The `mask@9000` entry crosses
+# an epoch boundary (epoch_cycles=8000) so the token hill-climb, bypass
+# latch, and DRAM pressure-update paths are all pinned too.
+GOLDEN = {
+    'ideal': {
+        'ipc': ['0x1.482aaa0000000p+7', '0x1.5d6eee0000000p+5'],
+        'l2_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'walk_lat': ['0x0.0p+0', '0x0.0p+0'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x0.0p+0'],
+    },
+    'pwc': {
+        'ipc': ['0x1.3f55560000000p+6', '0x1.a6b17e0000000p+3'],
+        'l2_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'walk_lat': ['0x1.5d2b601b37485p+7', '0x1.6df29ef39e8d6p+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.0a6810a6810a7p-7'],
+    },
+    'gpu-mmu': {
+        'ipc': ['0x1.5b2aaa0000000p+6', '0x1.055c280000000p+4'],
+        'l2_hit_rate': ['0x1.525e9863c82e7p-2', '0x1.cee54226786a5p-3'],
+        'walk_lat': ['0x1.b45335994cd66p+7', '0x1.5fb17b8068b0bp+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.c47f82d5f3dffp-1'],
+    },
+    'static': {
+        'ipc': ['0x1.5e00000000000p+6', '0x1.05cccc0000000p+4'],
+        'l2_hit_rate': ['0x1.5168f33fc139ep-2', '0x1.dcbe52ae69255p-3'],
+        'walk_lat': ['0x1.b121642c8590bp+7', '0x1.5ee88a4a1566ep+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.c4895da895da9p-1'],
+    },
+    'mask': {
+        'ipc': ['0x1.5ed5560000000p+6', '0x1.0b5f920000000p+4'],
+        'l2_hit_rate': ['0x1.50c577dfbd869p-2', '0x1.d8856ea1e4c34p-3'],
+        'walk_lat': ['0x1.a9a92058b8d67p+7', '0x1.594670b453b93p+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.c4cb1ab051b44p-1'],
+    },
+    'mask-tlb': {
+        'ipc': ['0x1.5b2aaa0000000p+6', '0x1.055c280000000p+4'],
+        'l2_hit_rate': ['0x1.525e9863c82e7p-2', '0x1.cee54226786a5p-3'],
+        'walk_lat': ['0x1.b45335994cd66p+7', '0x1.5fb17b8068b0bp+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.c47f82d5f3dffp-1'],
+    },
+    'mask-cache': {
+        'ipc': ['0x1.5b2aaa0000000p+6', '0x1.055c280000000p+4'],
+        'l2_hit_rate': ['0x1.525e9863c82e7p-2', '0x1.cee54226786a5p-3'],
+        'walk_lat': ['0x1.b45335994cd66p+7', '0x1.5fb17b8068b0bp+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.c47f82d5f3dffp-1'],
+    },
+    'mask-dram': {
+        'ipc': ['0x1.5ed5560000000p+6', '0x1.0b5f920000000p+4'],
+        'l2_hit_rate': ['0x1.50c577dfbd869p-2', '0x1.d8856ea1e4c34p-3'],
+        'walk_lat': ['0x1.a9a92058b8d67p+7', '0x1.594670b453b93p+8'],
+        'byp_hit_rate': ['0x0.0p+0', '0x0.0p+0'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.c4cb1ab051b44p-1'],
+    },
+    'mask@9000': {
+        'ipc': ['0x1.7302d80000000p+6', '0x1.594ade0000000p+4'],
+        'l2_hit_rate': ['0x1.3a35632183963p-2', '0x1.09f64cd027d93p-2'],
+        'walk_lat': ['0x1.2ad3396dfe0dap+7', '0x1.64f82963cf97ep+7'],
+        'byp_hit_rate': ['0x1.1d016196eece7p-6', '0x1.4c9ce1969ae63p-8'],
+        'tokens': ['0x1.e000000000000p+6', '0x1.e000000000000p+6'],
+        'l2c_tlb_hit_rate': ['0x1.dd475ea91278fp-1'],
+    },
+}
+
+
+@pytest.mark.parametrize("entry", sorted(GOLDEN))
+def test_design_shim_bitforbit_vs_preredesign(entry):
+    """`design(name)` via the registry reproduces the pre-redesign
+    flag-bag designs exactly (same compiled pipeline, same bits)."""
+    name, _, cyc = entry.partition("@")
+    s = run_mix(name, ["3DS", "BLK"], cycles=int(cyc) if cyc else 1200)
+    for key, want in GOLDEN[entry].items():
+        got = [x.hex() for x in
+               np.asarray(s[key], np.float64).ravel().tolist()]
+        assert got == want, f"{entry}:{key} drifted: {got} != {want}"
+
+
+def test_design_shim_legacy_fields_pinned():
+    """The registry-served designs expose exactly the legacy DesignPoint
+    field values of the pre-redesign table (pinned here verbatim)."""
+    from repro.core.mask import ALL_DESIGNS, MaskConfig, design
+    base_off = MaskConfig(tlb_tokens=False, l2_bypass=False,
+                          dram_sched=False)
+    expect = {
+        # name: (use_l2_tlb, use_pwc, ideal_tlb, static_partition, mask)
+        "ideal": (True, False, True, False, base_off),
+        "pwc": (False, True, False, False, base_off),
+        "gpu-mmu": (True, False, False, False, base_off),
+        "static": (True, False, False, True, base_off),
+        "mask": (True, False, False, False, MaskConfig()),
+        "mask-tlb": (True, False, False, False, MaskConfig(
+            tlb_tokens=True, l2_bypass=False, dram_sched=False)),
+        "mask-cache": (True, False, False, False, MaskConfig(
+            tlb_tokens=False, l2_bypass=True, dram_sched=False)),
+        "mask-dram": (True, False, False, False, MaskConfig(
+            tlb_tokens=False, l2_bypass=False, dram_sched=True)),
+    }
+    assert set(ALL_DESIGNS) == set(expect)
+    for name, (l2, pwc, ideal, static, mask_cfg) in expect.items():
+        d = design(name)
+        assert d.name == name
+        assert (d.use_l2_tlb, d.use_pwc, d.ideal_tlb,
+                d.static_partition) == (l2, pwc, ideal, static), name
+        assert d.mask == mask_cfg, name
