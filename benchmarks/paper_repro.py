@@ -29,8 +29,10 @@ CYCLES = 60_000
 N_PAIRS = 20     # of the 35 sampled pairs (CPU-budget subset; --full for all)
 # bump whenever simulator semantics change so stale JSON caches are not
 # silently mixed with fresh results (v2: layered pipeline + gap/l1d
-# field-index fix + TLB scatter fix)
-CACHE_VERSION = 2
+# field-index fix + TLB scatter fix; v3: lane-fused memory path — one
+# batched L2$/DRAM round per cycle with forwarding/port/victim-chain
+# emulation, see README "Performance")
+CACHE_VERSION = 3
 
 
 def _cache(name: str, fn, force=False):

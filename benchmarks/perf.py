@@ -13,49 +13,182 @@ comparable — interleaving keeps the scenarios under the same drift, and
 the recorded JSON gives future PRs a perf trajectory (compare ratios
 between scenarios / versions, not absolute steps/sec across days).
 
+`--compare <git-ref>` is the honest A/B protocol for the same reason:
+the baseline tree is materialized from git into a renamed `repro_base`
+package, both versions are compiled into THIS process, and each round
+times them back-to-back (pair-by-pair) so neighbor drift hits both
+sides equally; the reported number is the median new/old speedup per
+scenario, never a cross-run absolute.
+
 Run:  PYTHONPATH=src python -m benchmarks.perf [--cycles N] [--rounds R]
+      PYTHONPATH=src python -m benchmarks.perf --compare HEAD
 """
 from __future__ import annotations
 
 import argparse
+import importlib
 import json
 import platform
+import re
+import shutil
+import subprocess
+import sys
+import tarfile
 import time
+from io import BytesIO
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.sim.config import SimConfig
-from repro.sim.runner import _compiled_batch_run, _compiled_run, _mix_matrix
-from repro.sim.workloads import mix_workloads, pair_workloads
+REPO_ROOT = Path(__file__).resolve().parent.parent
+OUT_PATH = REPO_ROOT / "BENCH_sim.json"
+COMPARE_DIR = REPO_ROOT / ".bench_compare"
+_IMPORT_RE = re.compile(r"^(\s*(?:from|import)\s+)repro(?=[.\s])",
+                        re.MULTILINE)
 
-OUT_PATH = Path(__file__).resolve().parent.parent / "BENCH_sim.json"
 
+def _scenarios(design: str, cycles: int, pkg: str = "repro"):
+    """name -> (zero-arg compiled call, sim-steps per call).
 
-def _scenarios(design: str, cycles: int):
-    """name -> (zero-arg compiled call, sim-steps per call)."""
-    from repro.core.design import get_design
-    d = get_design(design)
+    `pkg` selects the simulator package ("repro" or a baseline copy such
+    as "repro_base") so two versions can be timed in one process.
+    """
+    import jax.numpy as jnp
+    config_mod = importlib.import_module(pkg + ".sim.config")
+    runner_mod = importlib.import_module(pkg + ".sim.runner")
+    workloads_mod = importlib.import_module(pkg + ".sim.workloads")
+    design_mod = importlib.import_module(pkg + ".core.design")
+    d = design_mod.get_design(design)
 
     def single(benches):
-        cfg = SimConfig(n_apps=len(benches), sim_cycles=cycles, design=d)
-        pm = jnp.asarray(_mix_matrix(benches))
-        fn = _compiled_run(cfg)
+        cfg = config_mod.SimConfig(n_apps=len(benches), sim_cycles=cycles,
+                                   design=d)
+        pm = jnp.asarray(runner_mod._mix_matrix(benches))
+        fn = runner_mod._compiled_run(cfg)
         return (lambda: jax.block_until_ready(fn(pm))), cycles
 
     def batch(mixes):
-        cfg = SimConfig(n_apps=len(mixes[0]), sim_cycles=cycles, design=d)
-        pm = jnp.asarray(np.stack([_mix_matrix(m) for m in mixes]))
-        fn = _compiled_batch_run(cfg)
+        cfg = config_mod.SimConfig(n_apps=len(mixes[0]), sim_cycles=cycles,
+                                   design=d)
+        pm = jnp.asarray(np.stack([runner_mod._mix_matrix(m)
+                                   for m in mixes]))
+        fn = runner_mod._compiled_batch_run(cfg)
         return (lambda: jax.block_until_ready(fn(pm))), cycles * len(mixes)
 
-    mix4 = mix_workloads(seed=7, n_mixes=1, n_apps=4)[0]
+    mix4 = workloads_mod.mix_workloads(seed=7, n_mixes=1, n_apps=4)[0]
     return {
         "2app": single(["3DS", "BLK"]),
         "4app": single(list(mix4)),
-        "batch8": batch(pair_workloads()[:8]),
+        "batch8": batch(workloads_mod.pair_workloads()[:8]),
+    }
+
+
+# ---------------------------------------------------------------------------
+# baseline materialization for --compare
+# ---------------------------------------------------------------------------
+
+def _materialize_baseline(ref: str) -> str:
+    """Extract src/repro at `ref` into .bench_compare/<sha>/src/repro_base
+    (imports rewritten), put it on sys.path, and return the resolved sha."""
+    sha = subprocess.run(["git", "rev-parse", ref], cwd=REPO_ROOT,
+                         capture_output=True, text=True,
+                         check=True).stdout.strip()
+    dest = COMPARE_DIR / sha[:12]
+    pkg_dir = dest / "src" / "repro_base"
+    if not pkg_dir.exists():
+        # stage into a temp dir and rename into place only when fully
+        # rewritten — a half-rewritten cached baseline would silently
+        # import the CURRENT `repro` modules and fake a ~1.0x ratio
+        shutil.rmtree(dest, ignore_errors=True)
+        tmp = COMPARE_DIR / (dest.name + ".tmp")
+        shutil.rmtree(tmp, ignore_errors=True)
+        tar_bytes = subprocess.run(
+            ["git", "archive", "--format=tar", sha, "src/repro"],
+            cwd=REPO_ROOT, capture_output=True, check=True).stdout
+        with tarfile.open(fileobj=BytesIO(tar_bytes)) as tf:
+            try:
+                tf.extractall(tmp, filter="data")
+            except TypeError:            # Python < 3.12
+                tf.extractall(tmp)
+        (tmp / "src" / "repro").rename(tmp / "src" / "repro_base")
+        for py in (tmp / "src" / "repro_base").rglob("*.py"):
+            py.write_text(_IMPORT_RE.sub(r"\1repro_base", py.read_text()))
+        tmp.rename(dest)
+    path = str(dest / "src")
+    if path not in sys.path:
+        sys.path.insert(0, path)
+    mod = importlib.import_module("repro_base.sim.runner")
+    assert mod.__file__.startswith(str(dest)), mod.__file__
+    return sha
+
+
+def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
+                rounds: int = 5, out_path: Path = OUT_PATH) -> dict:
+    """Interleaved A/B: current tree vs the committed tree at `ref`.
+
+    Each round times (new, old) back-to-back per scenario; the headline
+    number is the median over rounds of old_time / new_time (>1 means
+    the working tree is faster)."""
+    sha = _materialize_baseline(ref)
+    scen_new = _scenarios(design, cycles, "repro")
+    scen_old = _scenarios(design, cycles, "repro_base")
+    for name in scen_new:                  # compile + warm both sides
+        for tag, scen in (("new", scen_new), ("old", scen_old)):
+            t0 = time.perf_counter()
+            scen[name][0]()
+            print(f"# warm {name}/{tag}: {time.perf_counter() - t0:.1f}s",
+                  flush=True)
+
+    ratios = {name: [] for name in scen_new}
+    rates = {name: {"new": [], "old": []} for name in scen_new}
+    for r in range(rounds):
+        for name in scen_new:
+            call_new, steps = scen_new[name]
+            call_old, _ = scen_old[name]
+            t0 = time.perf_counter()
+            call_new()
+            t_new = time.perf_counter() - t0
+            t0 = time.perf_counter()
+            call_old()
+            t_old = time.perf_counter() - t0
+            ratios[name].append(t_old / t_new)
+            rates[name]["new"].append(steps / t_new)
+            rates[name]["old"].append(steps / t_old)
+        print(f"# compare round {r + 1}/{rounds} done", flush=True)
+
+    result = _measure_report(design, cycles, rounds,
+                             {n: rates[n]["new"] for n in rates})
+    result["compare"] = {
+        "ref": ref,
+        "sha": sha,
+        "speedup": {n: float(np.median(v)) for n, v in ratios.items()},
+        "ratio_samples": {n: [float(x) for x in v]
+                          for n, v in ratios.items()},
+        "baseline_steps_per_sec": {n: float(np.median(rates[n]["old"]))
+                                   for n in rates},
+    }
+    out_path.write_text(json.dumps(result, indent=2) + "\n")
+    print(json.dumps({"design": design, "cycles": cycles,
+                      "steps_per_sec": result["steps_per_sec"],
+                      "speedup_vs_" + sha[:8]: result["compare"]["speedup"]},
+                     indent=2))
+    print(f"# wrote {out_path}")
+    return result
+
+
+def _measure_report(design, cycles, rounds, samples) -> dict:
+    return {
+        "design": design,
+        "cycles": cycles,
+        "rounds": rounds,
+        "steps_per_sec": {n: float(np.median(v)) for n, v in samples.items()},
+        "samples": {n: [float(x) for x in v] for n, v in samples.items()},
+        "meta": {
+            "jax": jax.__version__,
+            "platform": platform.platform(),
+            "backend": jax.default_backend(),
+        },
     }
 
 
@@ -76,18 +209,7 @@ def run_bench(design: str = "mask", cycles: int = 8_000, rounds: int = 5,
             samples[name].append(steps / dt)
         print(f"# round {r + 1}/{rounds} done", flush=True)
 
-    result = {
-        "design": design,
-        "cycles": cycles,
-        "rounds": rounds,
-        "steps_per_sec": {n: float(np.median(v)) for n, v in samples.items()},
-        "samples": {n: [float(x) for x in v] for n, v in samples.items()},
-        "meta": {
-            "jax": jax.__version__,
-            "platform": platform.platform(),
-            "backend": jax.default_backend(),
-        },
-    }
+    result = _measure_report(design, cycles, rounds, samples)
     out_path.write_text(json.dumps(result, indent=2) + "\n")
     print(json.dumps({k: result[k] for k in ("design", "cycles",
                                              "steps_per_sec")}, indent=2))
@@ -101,8 +223,15 @@ def main() -> None:
     ap.add_argument("--cycles", type=int, default=8_000)
     ap.add_argument("--rounds", type=int, default=5)
     ap.add_argument("--out", type=Path, default=OUT_PATH)
+    ap.add_argument("--compare", metavar="GIT_REF", default=None,
+                    help="interleave against the committed tree at GIT_REF "
+                         "and report median new/old speedups")
     args = ap.parse_args()
-    run_bench(args.design, args.cycles, args.rounds, args.out)
+    if args.compare:
+        run_compare(args.compare, args.design, args.cycles, args.rounds,
+                    args.out)
+    else:
+        run_bench(args.design, args.cycles, args.rounds, args.out)
 
 
 if __name__ == "__main__":

@@ -63,58 +63,101 @@ def classify(state: DramState, app, is_tlb, mask_enabled: bool):
 
 def access(state: DramState, channel, bank, row, app, is_tlb, active,
            mask_enabled: bool, thres_max: int = 500,
-           fr_fcfs: bool = True) -> Tuple[DramState, jax.Array]:
+           fr_fcfs: bool = True, waves: int = 1) -> Tuple[DramState, jax.Array]:
     """Batched DRAM access model. All args (N,). Returns (state', latency (N,)).
 
     Latency = service (row hit/miss) + queueing: number of requests this
     step that rank ahead of you on the same channel (priority-class first,
     then row-hit-first within class) × T_QUEUE_UNIT + standing backlog.
+
+    `waves` partitions the batch into `waves` contiguous equal groups that
+    are queued independently (in-batch ranking is block-diagonal): the
+    simulator's fused memory path hands over all of a cycle's sub-access
+    rounds in one call, and each round contends only with itself — exactly
+    as when the rounds were separate sequential calls. `waves=1` is the
+    plain fully-contending batch.
     """
     n_channels, n_banks = state.open_row.shape
     cls = classify(state, app, is_tlb, mask_enabled)
 
+    N = app.shape[0]
+    C = N // waves
     row_hit = state.open_row[channel, bank] == row
+    if waves > 1:
+        # progressive open rows across waves, per flat position (the same
+        # core's earlier sub-access opening the row it re-touches is the
+        # dominant sequential row-hit source); cross-position openings and
+        # closings between waves are not modeled
+        row_w = row.reshape(waves, C)
+        cb_w = (channel * n_banks + bank).reshape(waves, C)
+        tri_w = jnp.arange(waves)[:, None, None] \
+            < jnp.arange(waves)[None, :, None]
+        opened = ((row_w[:, None, :] == row_w[None, :, :])
+                  & (cb_w[:, None, :] == cb_w[None, :, :])
+                  & tri_w & active.reshape(waves, C)[:, None, :]) \
+            .any(0).reshape(N)
+        row_hit = row_hit | opened
     service = jnp.where(row_hit, T_ROW_HIT, T_ROW_MISS)
 
-    # rank = priority ahead of me on my (channel, bank) this step — banks
-    # service in parallel
-    same_ch = (channel[None, :] == channel[:, None]) \
-        & (bank[None, :] == bank[:, None]) & active[None, :]
-    if fr_fcfs:
-        key_other = cls[None, :] * 2 + (~row_hit[None, :])
-        key_mine = (cls * 2 + (~row_hit))[:, None]
-    else:  # pure FCFS
-        key_other = cls[None, :] * 2
-        key_mine = (cls * 2)[:, None]
-    order = jnp.arange(app.shape[0])
-    ahead = same_ch & ((key_other < key_mine)
-                       | ((key_other == key_mine)
-                          & (order[None, :] < order[:, None])))
-    n_ahead = ahead.sum(axis=1)
+    # rank = priority ahead of me on my (channel, bank) within my wave —
+    # banks service in parallel. (waves, C, C) blocks instead of (N, N).
+    cb = (channel * n_banks + bank).reshape(waves, C)
+    key = cls * 2 + (~row_hit) if fr_fcfs else cls * 2
+    key = key.reshape(waves, C)
+    tri = jnp.arange(C)[None, :] < jnp.arange(C)[:, None]   # j before i
+    ahead = (cb[:, None, :] == cb[:, :, None]) \
+        & active.reshape(waves, C)[:, None, :] \
+        & ((key[:, None, :] < key[:, :, None])
+           | ((key[:, None, :] == key[:, :, None]) & tri[None]))
+    n_ahead = ahead.sum(axis=2).reshape(N)
 
-    backlog = state.queue_len[channel, cls]
+    # standing backlog + EWMA decay toward observed per-class pressure.
+    # With waves > 1 the EWMA chains once per wave (exactly the update the
+    # sequential per-round calls applied 8x per cycle — a single update
+    # with the summed counts would settle ~3x too high) and each wave
+    # reads the backlog its round would have seen.
+    quota = silver_quota(state, thres_max)
+    n_apps = state.conc_walks.shape[0]
+    if waves == 1:
+        backlog = state.queue_len[channel, cls]
+        counts = jnp.zeros((n_channels, 3), jnp.int32).at[channel, cls].add(
+            active.astype(jnp.int32))
+        queue_len = (state.queue_len * 3 + counts) // 4
+        served_w = (active & (cls == 1)).sum(dtype=jnp.int32)[None]
+    else:
+        wave_ix = jnp.repeat(jnp.arange(waves, dtype=jnp.int32), C)
+        counts = jnp.zeros((waves, n_channels, 3), jnp.int32).at[
+            wave_ix, channel, cls].add(active.astype(jnp.int32))
+        qs = []
+        queue_len = state.queue_len
+        for k in range(waves):
+            qs.append(queue_len)
+            queue_len = (queue_len * 3 + counts[k]) // 4
+        backlog = jnp.stack(qs)[wave_ix, channel, cls]
+        served_w = (active & (cls == 1)).reshape(waves, C) \
+            .sum(1, dtype=jnp.int32)
+
     latency = service + (n_ahead + backlog) * T_QUEUE_UNIT
     latency = jnp.where(active, latency, 0)
 
     # ---- state updates ----
-    # open rows: last active request per (channel, bank) wins
-    new_open = state.open_row.at[channel, bank].set(
-        jnp.where(active, row, state.open_row[channel, bank]))
+    # open rows: last active request per (channel, bank) wins; inactive
+    # lanes are routed out of bounds and dropped — a masked write-back of
+    # the gathered value would let a trailing inactive lane clobber an
+    # earlier active lane's update with the stale cycle-start row
+    new_open = state.open_row.at[
+        jnp.where(active, channel, n_channels), bank].set(row, mode="drop")
 
-    # silver rotation: consume quota for serviced silver requests
-    served_silver = (active & (cls == 1)).sum(dtype=jnp.int32)
-    left = state.silver_left - served_silver
-    quota = silver_quota(state, thres_max)
-    n_apps = state.conc_walks.shape[0]
-    next_app = (state.silver_app + 1) % n_apps
-    rotate = left <= 0
-    silver_app = jnp.where(rotate, next_app, state.silver_app)
-    silver_left = jnp.where(rotate, quota[next_app], left)
-
-    # decay standing backlog toward observed per-class pressure (EWMA)
-    counts = jnp.zeros((n_channels, 3), jnp.int32).at[channel, cls].add(
-        active.astype(jnp.int32))
-    queue_len = (state.queue_len * 3 + counts) // 4
+    # silver rotation: consume quota per wave (at most one rotation per
+    # wave, like the sequential per-round calls); classification keeps the
+    # cycle-start silver app — mid-cycle rotations reclassify nothing
+    silver_app, silver_left = state.silver_app, state.silver_left
+    for k in range(served_w.shape[0]):
+        left = silver_left - served_w[k]
+        next_app = (silver_app + 1) % n_apps
+        rotate = left <= 0
+        silver_app = jnp.where(rotate, next_app, silver_app)
+        silver_left = jnp.where(rotate, quota[next_app], left)
 
     return state._replace(open_row=new_open, silver_app=silver_app,
                           silver_left=silver_left,

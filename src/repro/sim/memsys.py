@@ -1,18 +1,31 @@
-"""Vectorized memory-hierarchy simulator: a layered one-cycle pipeline.
+"""Vectorized memory-hierarchy simulator: a lane-fused one-cycle pipeline.
 
 The cycle transition is composed of pure stages, each with its own state /
 result NamedTuple so every layer is individually unit-testable:
 
-  warp_sched        -- per-core GTO-like pick (oldest-ready-first): one
-                       ready warp per core issues one memory instruction.
-  translation       -- per-core L1 TLB bank -> shared L2 TLB (+ bypass
-                       cache) -> page walk (4 dependent PTE accesses
-                       through the shared L2 data cache / DRAM), with
-                       MSHR-style merging of concurrent walks to the same
-                       (ASID, VPN) (Fig. 4's multi-warp stalls).
-  datapath          -- L1D -> shared L2 data cache -> DRAM for the
-                       translated access (DATA_WIDTH divergent lines).
-  accumulate_stats  -- per-app counters behind the paper's tables/figures.
+  warp_sched           -- per-core GTO-like pick (oldest-ready-first): one
+                          ready warp per core issues one memory instruction.
+  translation_probe    -- per-core L1 TLB bank -> shared L2 TLB (+ bypass
+                          cache) probes/fills, MSHR-style merging of
+                          concurrent walks to the same (ASID, VPN) (Fig. 4's
+                          multi-warp stalls), PWC lookups, and generation of
+                          the page-walk PTE lanes.
+  datapath_front       -- L1D hit draw + the DATA_WIDTH divergent line
+                          addresses of the translated access.
+  shared_memory_access -- ONE lane-flattened L2$ + DRAM round for ALL of a
+                          cycle's sub-accesses: the walk_levels PTE lanes
+                          and the DATA_WIDTH data lanes, (C*(L+K),) flat.
+                          This used to be 8 back-to-back probe/fill/DRAM
+                          pipelines per cycle; `tlb.access_fused` keeps the
+                          cross-round semantics (later waves observing
+                          earlier fills, per-(set, wave) fill ports, LRU
+                          victim chains) inside the single batched call.
+  translation_commit   -- walk latencies, walk-table install, translation
+                          latency resolution.
+  accumulate_stats     -- per-app counters behind the paper's tables and
+                          figures, packed into one int32 plane + one
+                          float32 plane + a 4-vector of shared counters,
+                          each updated by a single segment-sum.
 
 `step` is a thin composition of those stages plus warp retire and epoch
 maintenance. Every design point (ideal / PWC / GPU-MMU / Static /
@@ -25,7 +38,8 @@ and never ad-hoc flag bags — and `n_apps` is arbitrary: the paper's
 
 All translation caches (L1 bank, L2 TLB, bypass cache, PWC, and the
 line-addressed L2 data cache) share `core/tlb.py`'s probe/fill machinery;
-the L1 bank is a vmapped TLBState with a leading (n_cores,) axis.
+the L1 bank is a TLBState with a leading (n_cores,) axis driven by the
+direct bank kernels.
 
 All state lives in `SimState` arrays -> the whole run is one lax.scan.
 """
@@ -51,6 +65,20 @@ BIG = jnp.int32(1 << 30)
 # the concurrent-page-walk table size (Table 1: 64) comes from
 # cfg.design.translation.max_concurrent_walks
 
+# packed walk-table columns: TransState.walk is (max_concurrent_walks, 4)
+WVPN, WASID, WDONE, WMERGED = range(4)
+
+# packed per-app int32 counter plane: StatState.ints is (n_apps, N_INT)
+(I_L1_HIT, I_L1_MISS, I_L2_HIT, I_L2_MISS, I_BYP_HIT, I_BYP_PROBE,
+ I_WALKS, I_DRAM_TLB_N, I_DRAM_DATA_N) = range(9)
+N_INT = 9
+# packed per-app float32 plane: StatState.floats is (n_apps, N_FLOAT)
+F_WALK_LAT, F_STALL_PER_MISS, F_DRAM_TLB_LAT, F_DRAM_DATA_LAT = range(4)
+N_FLOAT = 4
+# shared (not per-app) counters: StatState.scalars is (N_SCALAR,)
+S_L2C_TLB_HIT, S_L2C_TLB_PROBE, S_L2C_DATA_HIT, S_L2C_DATA_PROBE = range(4)
+N_SCALAR = 4
+
 
 # ---------------------------------------------------------------------------
 # layered state
@@ -62,10 +90,24 @@ class TransState(NamedTuple):
     l2tlb: tlb_mod.TLBState
     bypass_tlb: tlb_mod.TLBState
     pwc: tlb_mod.TLBState        # page-walk cache (PTE lines)
-    walk_vpn: jax.Array          # (max_concurrent_walks,) int32
-    walk_asid: jax.Array         # (max_concurrent_walks,) int32
-    walk_done: jax.Array         # (max_concurrent_walks,) completion time
-    walk_merged: jax.Array       # (max_concurrent_walks,) warps merged on
+    walk: jax.Array              # (max_concurrent_walks, 4) int32 packed
+    #                              columns: WVPN, WASID, WDONE, WMERGED
+
+    @property
+    def walk_vpn(self) -> jax.Array:
+        return self.walk[..., WVPN]
+
+    @property
+    def walk_asid(self) -> jax.Array:
+        return self.walk[..., WASID]
+
+    @property
+    def walk_done(self) -> jax.Array:
+        return self.walk[..., WDONE]
+
+    @property
+    def walk_merged(self) -> jax.Array:
+        return self.walk[..., WMERGED]
 
 
 class DataState(NamedTuple):
@@ -76,24 +118,35 @@ class DataState(NamedTuple):
 
 
 class StatState(NamedTuple):
-    """Per-app cumulative counters (all (n_apps,) unless noted)."""
-    s_l1_hit: jax.Array
-    s_l1_miss: jax.Array
-    s_l2_hit: jax.Array
-    s_l2_miss: jax.Array
-    s_byp_hit: jax.Array         # bypass-cache hits
-    s_byp_probe: jax.Array       # bypass-cache probes
-    s_walk_lat: jax.Array        # float32 summed walk latency
-    s_walks: jax.Array
-    s_stall_per_miss: jax.Array  # accumulated merged-warp counts
-    s_dram_tlb_lat: jax.Array    # float32
-    s_dram_tlb_n: jax.Array
-    s_dram_data_lat: jax.Array
-    s_dram_data_n: jax.Array
-    s_l2c_tlb_hit: jax.Array     # () cumulative L2$ hits for walk requests
-    s_l2c_tlb_probe: jax.Array
-    s_l2c_data_hit: jax.Array
-    s_l2c_data_probe: jax.Array
+    """Cumulative counters, packed into three planes.
+
+    `ints` / `floats` have the app axis first and the counter index last
+    (the I_* / F_* constants), so one segment-sum over the per-core lane
+    outcomes updates a whole plane; `scalars` holds the shared
+    (non-per-app) L2$ counters (S_* constants). The legacy `s_*` names are
+    kept as read-only views so stats consumers and tests are unchanged.
+    """
+    ints: jax.Array              # (n_apps, N_INT) int32
+    floats: jax.Array            # (n_apps, N_FLOAT) float32
+    scalars: jax.Array           # (N_SCALAR,) int32
+
+    s_l1_hit = property(lambda s: s.ints[..., I_L1_HIT])
+    s_l1_miss = property(lambda s: s.ints[..., I_L1_MISS])
+    s_l2_hit = property(lambda s: s.ints[..., I_L2_HIT])
+    s_l2_miss = property(lambda s: s.ints[..., I_L2_MISS])
+    s_byp_hit = property(lambda s: s.ints[..., I_BYP_HIT])
+    s_byp_probe = property(lambda s: s.ints[..., I_BYP_PROBE])
+    s_walks = property(lambda s: s.ints[..., I_WALKS])
+    s_dram_tlb_n = property(lambda s: s.ints[..., I_DRAM_TLB_N])
+    s_dram_data_n = property(lambda s: s.ints[..., I_DRAM_DATA_N])
+    s_walk_lat = property(lambda s: s.floats[..., F_WALK_LAT])
+    s_stall_per_miss = property(lambda s: s.floats[..., F_STALL_PER_MISS])
+    s_dram_tlb_lat = property(lambda s: s.floats[..., F_DRAM_TLB_LAT])
+    s_dram_data_lat = property(lambda s: s.floats[..., F_DRAM_DATA_LAT])
+    s_l2c_tlb_hit = property(lambda s: s.scalars[..., S_L2C_TLB_HIT])
+    s_l2c_tlb_probe = property(lambda s: s.scalars[..., S_L2C_TLB_PROBE])
+    s_l2c_data_hit = property(lambda s: s.scalars[..., S_L2C_DATA_HIT])
+    s_l2c_data_probe = property(lambda s: s.scalars[..., S_L2C_DATA_PROBE])
 
 
 class SimState(NamedTuple):
@@ -111,17 +164,13 @@ def init_trans(cfg: SimConfig) -> TransState:
     tr = cfg.design.translation
     tok = cfg.design.tokens
     wt = tr.max_concurrent_walks
-    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
     return TransState(
         l1=tlb_mod.init_bank(cfg.n_cores, tr.l1_entries, tr.l1_entries),
         l2tlb=tlb_mod.init(tr.l2_entries, tr.l2_ways),
         bypass_tlb=tlb_mod.init(tok.bypass_cache_entries,
                                 tok.bypass_cache_entries),
         pwc=tlb_mod.init(cfg.pwc_entries, cfg.pwc_ways),
-        walk_vpn=jnp.full((wt,), -1, jnp.int32),
-        walk_asid=jnp.full((wt,), -1, jnp.int32),
-        walk_done=z(wt),
-        walk_merged=z(wt),
+        walk=jnp.tile(jnp.asarray([-1, -1, 0, 0], jnp.int32), (wt, 1)),
     )
 
 
@@ -134,17 +183,10 @@ def init_data(cfg: SimConfig) -> DataState:
 
 
 def init_stats(n_apps: int) -> StatState:
-    z = lambda *s: jnp.zeros(s, jnp.int32)  # noqa: E731
-    zf = lambda *s: jnp.zeros(s, jnp.float32)  # noqa: E731
-    na = n_apps
     return StatState(
-        s_l1_hit=z(na), s_l1_miss=z(na), s_l2_hit=z(na), s_l2_miss=z(na),
-        s_byp_hit=z(na), s_byp_probe=z(na),
-        s_walk_lat=zf(na), s_walks=z(na), s_stall_per_miss=zf(na),
-        s_dram_tlb_lat=zf(na), s_dram_tlb_n=z(na),
-        s_dram_data_lat=zf(na), s_dram_data_n=z(na),
-        s_l2c_tlb_hit=z(), s_l2c_tlb_probe=z(),
-        s_l2c_data_hit=z(), s_l2c_data_probe=z(),
+        ints=jnp.zeros((n_apps, N_INT), jnp.int32),
+        floats=jnp.zeros((n_apps, N_FLOAT), jnp.float32),
+        scalars=jnp.zeros((N_SCALAR,), jnp.int32),
     )
 
 
@@ -198,72 +240,42 @@ def warp_sched(cfg: SimConfig, params_mat, stall_until, pos, t) -> SchedOut:
 
 
 # ---------------------------------------------------------------------------
-# shared L2 data cache + DRAM (used by both translation and datapath)
+# stage 2a: translation probes (L1 TLB bank -> L2 TLB/bypass -> walk setup)
 # ---------------------------------------------------------------------------
 
-def _l2_cache_access(cfg: SimConfig, l2c, dram, line, app, is_tlb,
-                     may_fill, active, t, static_split):
-    """Shared L2 data cache + DRAM for a batch of line addresses.
+class TransProbe(NamedTuple):
+    """Front half of translation: everything before the shared L2$/DRAM.
 
-    Returns (l2c', dram', latency, l2_hit). `may_fill` implements the MASK
-    L2 bypass decision; `static_split` gives each app an equal slice of the
-    sets/channels by restricting its index range (Static design)."""
-    dr = cfg.design.dram
-    key = jnp.where(static_split,
-                    static_partition_index(line, cfg.l2_sets, cfg.n_apps,
-                                           app),
-                    line % cfg.l2_sets)
-    # reuse TLB machinery: tag = full line id, "asid" field = 0
-    zero = jnp.zeros_like(line)
-    l2c, hit = tlb_mod.probe(l2c, line * cfg.l2_sets + key, zero, active, t)
-    lat = jnp.where(hit, cfg.lat_l2_cache, 0)
-    miss = active & ~hit
-
-    channel = (line % cfg.n_channels).astype(jnp.int32)
-    channel = jnp.where(static_split,
-                        static_partition_index(line, cfg.n_channels,
-                                               cfg.n_apps, app), channel)
-    bank = ((line // cfg.n_channels) % cfg.n_banks).astype(jnp.int32)
-    row = (line // (cfg.n_channels * cfg.n_banks * 32)).astype(jnp.int32)
-    dram, dlat = dram_sched.access(
-        dram, channel, bank, row, app, is_tlb, miss,
-        mask_enabled=dr.enabled, thres_max=dr.thres_max)
-    lat = lat + jnp.where(miss, cfg.lat_l2_cache + dlat, 0)
-    l2c = tlb_mod.fill(l2c, line * cfg.l2_sets + key, zero,
-                       miss & may_fill, t)
-    return l2c, dram, lat, hit
-
-
-# ---------------------------------------------------------------------------
-# stage 2: translation (L1 TLB bank -> L2 TLB/bypass -> page walk)
-# ---------------------------------------------------------------------------
-
-class TransOut(NamedTuple):
-    """Per-core translation results + walk-level L2$ counters."""
-    trans_lat: jax.Array         # (C,) translation latency
-    l1_hit: jax.Array            # (C,) bool
+    Per-core arrays are (C,); the walk lanes are flattened wave-major
+    ((walk_levels * C,), level slowest) so the shared memory stage can
+    service them in one batched call. For the "ideal" design the walk
+    machinery traces out entirely and the lane arrays are empty.
+    """
+    l1_hit: jax.Array
     l1_miss: jax.Array
     l2_hit: jax.Array
     byp_hit: jax.Array
     l2_hit_eff: jax.Array        # L2 or bypass-cache hit
     need_walk: jax.Array
     merged: jax.Array            # joined an in-flight walk
+    merge_done: jax.Array        # completion time of the joined walk
+    first_match: jax.Array       # walk-table slot of the joined walk
     new_walk: jax.Array          # started a fresh walk
-    walk_done_new: jax.Array     # (C,) completion time of fresh walks
-    dram_tlb_lat: jax.Array      # (C,) float32 DRAM latency on walk path
-    dram_tlb_n: jax.Array        # (C,) int32
-    l2c_hit: jax.Array           # () walk-request hits in the L2$
-    l2c_probe: jax.Array         # () walk-request probes of the L2$
+    queue_pen: jax.Array         # finite-walker-thread queue penalty
+    pwc_lat: jax.Array           # (C,) summed 5-cycle PWC-hit latencies
+    walk_lines: jax.Array        # (L*C,) PTE line ids, wave-major
+    walk_go: jax.Array           # (L*C,) bool: lanes that access the L2$
+    walk_tags: jax.Array         # (L*C,) page-walk depth tags (§5.3)
 
 
-def translation(cfg: SimConfig, trans: TransState, data: DataState,
-                tokens: tok_mod.TokenState, sched: SchedOut, t
-                ) -> Tuple[TransState, DataState, TransOut]:
-    """Translate one request per core through the full TLB hierarchy.
+def translation_probe(cfg: SimConfig, trans: TransState,
+                      tokens: tok_mod.TokenState, sched: SchedOut, t
+                      ) -> Tuple[TransState, TransProbe]:
+    """TLB hierarchy probes/fills + page-walk lane generation.
 
-    Dispatch is by the translation/tokens/bypass policy specs: the
-    spec fields are static Python values, so each design compiles to a
-    specialized pipeline with the unused paths traced out."""
+    Dispatch is by the translation/tokens policy specs: the spec fields
+    are static Python values, so each design compiles to a specialized
+    pipeline with the unused paths traced out."""
     des = cfg.design
     tr = des.translation
     ideal = tr.kind == "ideal"
@@ -297,96 +309,8 @@ def translation(cfg: SimConfig, trans: TransState, data: DataState,
 
     need_walk = l1_miss & ~l2_hit_eff
 
-    # ---------------- page walk (4 dependent PTE accesses) -------------
-    # MSHR merge: outstanding walk for same (vpn, asid)?
-    wmatch = (trans.walk_vpn[None, :] == vpn[:, None]) & \
-             (trans.walk_asid[None, :] == asid[:, None]) & \
-             (trans.walk_done[None, :] > t)
-    merged = wmatch.any(axis=1) & need_walk
-    merge_done = jnp.where(
-        merged, jnp.max(jnp.where(wmatch, trans.walk_done[None, :], 0),
-                        axis=1), 0)
-
-    new_walk = need_walk & ~merged
-    n_live = (trans.walk_done > t).sum()
-    # walker occupancy queue penalty (finite walker threads)
-    wt = tr.max_concurrent_walks
-    over = jnp.maximum(n_live + jnp.cumsum(new_walk) - wt, 0)
-    queue_pen = over * 30
-
-    pte_lines = pt_mod.pte_line_addresses(
-        pt_mod.PageTableConfig(levels=tr.walk_levels), asid, vpn)  # (C, L)
-
-    walk_lat = jnp.zeros((C,), jnp.int32)
-    dram_tlb_lat = jnp.zeros((C,), jnp.float32)
-    dram_tlb_n = jnp.zeros((C,), jnp.int32)
-    l2c, dram, bp_state = data.l2c, data.dram, data.bypass
-    pwc = trans.pwc
-    static = jnp.asarray(des.partition.kind == "static")
-    l2c_hit = l2c_probe = jnp.zeros((), jnp.int32)
-    for lvl in range(tr.walk_levels):
-        line = pte_lines[:, lvl]
-        lvl_active = new_walk
-        depth_tag = jnp.full((C,), pt_mod.walk_depth_tag(lvl), jnp.int32)
-        if use_pwc:
-            pwc, pwc_hit = tlb_mod.probe(pwc, line, asid * 0, lvl_active, t)
-            pwc = tlb_mod.fill(pwc, line, asid * 0, lvl_active & ~pwc_hit, t)
-            go_l2 = lvl_active & ~pwc_hit
-            walk_lat = walk_lat + jnp.where(lvl_active & pwc_hit, 5, 0)
-        else:
-            go_l2 = lvl_active
-        if des.bypass.enabled:
-            may_fill = bp_mod.should_fill(bp_state, depth_tag)
-        else:
-            may_fill = jnp.ones((C,), bool)
-        l2c, dram, lat, l2hit = _l2_cache_access(
-            cfg, l2c, dram, line, sched.app, jnp.ones((C,), bool),
-            may_fill, go_l2, t, static)
-        bp_state = bp_mod.record(bp_state, depth_tag, l2hit, go_l2)
-        walk_lat = walk_lat + jnp.where(go_l2, lat, 0)
-        went_dram = go_l2 & ~l2hit
-        dram_tlb_lat = dram_tlb_lat + jnp.where(went_dram, lat, 0)
-        dram_tlb_n = dram_tlb_n + went_dram.astype(jnp.int32)
-        l2c_hit = l2c_hit + (go_l2 & l2hit).sum(dtype=jnp.int32)
-        l2c_probe = l2c_probe + go_l2.sum(dtype=jnp.int32)
-
-    walk_lat = walk_lat + queue_pen
-    walk_done_new = t + cfg.lat_l2_tlb + walk_lat
-
-    # install new walks into free slots (expired entries are free)
-    free = trans.walk_done <= t
-    order_slots = jnp.cumsum(new_walk) - 1
-    free_idx = jnp.where(free, jnp.arange(wt), BIG)
-    free_sorted = jnp.sort(free_idx)
-    slot_for = jnp.where(new_walk,
-                         free_sorted[jnp.clip(order_slots, 0, wt - 1)],
-                         BIG)
-    can_install = slot_for < wt
-    slot_safe = jnp.clip(slot_for, 0, wt - 1).astype(jnp.int32)
-    inst = new_walk & can_install
-    walk_vpn = trans.walk_vpn.at[slot_safe].set(
-        jnp.where(inst, vpn, trans.walk_vpn[slot_safe]))
-    walk_asid = trans.walk_asid.at[slot_safe].set(
-        jnp.where(inst, asid, trans.walk_asid[slot_safe]))
-    walk_done = trans.walk_done.at[slot_safe].set(
-        jnp.where(inst, walk_done_new, trans.walk_done[slot_safe]))
-    walk_merged_arr = trans.walk_merged.at[slot_safe].set(
-        jnp.where(inst, 1, trans.walk_merged[slot_safe]))
-    # bump merge counters
-    first_match = jnp.argmax(wmatch, axis=1)
-    walk_merged_arr = walk_merged_arr.at[first_match].add(
-        jnp.where(merged, 1, 0))
-
-    # ---------------- translation latency ------------------------------
-    trans_lat = jnp.where(
-        l1_hit, cfg.lat_l1_tlb,
-        jnp.where(l2_hit_eff, cfg.lat_l2_tlb,
-                  jnp.where(merged, jnp.maximum(merge_done - t, 1),
-                            jnp.maximum(walk_done_new - t, 1))))
-    if ideal:
-        trans_lat = jnp.where(active, cfg.lat_l1_tlb, 0)
-
     # ---------------- TLB fills on walk return -------------------------
+    # (independent of the walk's memory latency, so they live here)
     if use_l2tlb:
         if tokens_on:
             # tokens are distributed round-robin over the app's cores in
@@ -401,23 +325,297 @@ def translation(cfg: SimConfig, trans: TransState, data: DataState,
         else:
             fill_l2 = need_walk
         l2tlb = tlb_mod.fill(l2tlb, vpn, asid, fill_l2, t)
+
+    zb = jnp.zeros((C,), bool)
+    zi = jnp.zeros((C,), jnp.int32)
+    if ideal:
+        # need_walk is identically False: the walk lanes, MSHR table, and
+        # walker queue model all trace out of the compiled graph
+        return (TransState(l1=l1, l2tlb=l2tlb, bypass_tlb=byp_tlb,
+                           pwc=trans.pwc, walk=trans.walk),
+                TransProbe(l1_hit=l1_hit, l1_miss=l1_miss, l2_hit=l2_hit,
+                           byp_hit=byp_hit, l2_hit_eff=l2_hit_eff,
+                           need_walk=need_walk, merged=zb, merge_done=zi,
+                           first_match=zi, new_walk=zb, queue_pen=zi,
+                           pwc_lat=zi,
+                           walk_lines=jnp.zeros((0,), jnp.int32),
+                           walk_go=jnp.zeros((0,), bool),
+                           walk_tags=jnp.zeros((0,), jnp.int32)))
+
     l1 = tlb_mod.fill_bank(l1, vpn, asid, l1_miss, t)
 
-    trans_out = TransOut(
-        trans_lat=trans_lat, l1_hit=l1_hit, l1_miss=l1_miss, l2_hit=l2_hit,
-        byp_hit=byp_hit, l2_hit_eff=l2_hit_eff, need_walk=need_walk,
-        merged=merged, new_walk=new_walk, walk_done_new=walk_done_new,
-        dram_tlb_lat=dram_tlb_lat, dram_tlb_n=dram_tlb_n,
-        l2c_hit=l2c_hit, l2c_probe=l2c_probe)
+    # ---------------- MSHR merge: outstanding walk for same (vpn, asid)?
+    walk_vpn, walk_asid, walk_done = (trans.walk[:, WVPN],
+                                      trans.walk[:, WASID],
+                                      trans.walk[:, WDONE])
+    wmatch = (walk_vpn[None, :] == vpn[:, None]) & \
+             (walk_asid[None, :] == asid[:, None]) & \
+             (walk_done[None, :] > t)
+    merged = wmatch.any(axis=1) & need_walk
+    merge_done = jnp.where(
+        merged, jnp.max(jnp.where(wmatch, walk_done[None, :], 0), axis=1), 0)
+    first_match = jnp.argmax(wmatch, axis=1)
+
+    new_walk = need_walk & ~merged
+    n_live = (walk_done > t).sum()
+    # walker occupancy queue penalty (finite walker threads)
+    wt = tr.max_concurrent_walks
+    over = jnp.maximum(n_live + jnp.cumsum(new_walk) - wt, 0)
+    queue_pen = over * 30
+
+    # ---------------- page-walk lanes (walk_levels dependent PTE lines)
+    L = tr.walk_levels
+    pte_lines = pt_mod.pte_line_addresses(
+        pt_mod.PageTableConfig(levels=L), asid, vpn)      # (C, L)
+    walk_lines = pte_lines.T.reshape(L * C)               # wave-major
+    walk_active = jnp.tile(new_walk, L)
+    walk_tags = jnp.repeat(jnp.asarray(
+        [pt_mod.walk_depth_tag(lv) for lv in range(L)], jnp.int32), C)
+
+    pwc = trans.pwc
+    pwc_lat = zi
+    if use_pwc:
+        # fused probe+fill with per-(set, level) fill ports — PTE lines are
+        # unique across levels, so the PWC is tag-only too
+        pwc, pwc_hit, _ = tlb_mod.access_fused(
+            pwc, walk_lines, jnp.zeros_like(walk_lines), walk_active,
+            jnp.ones((L * C,), bool), t, n_waves=L, track_asids=False)
+        walk_go = walk_active & ~pwc_hit
+        pwc_lat = 5 * (walk_active & pwc_hit).reshape(L, C) \
+            .sum(0, dtype=jnp.int32)
+    else:
+        walk_go = walk_active
+
     return (TransState(l1=l1, l2tlb=l2tlb, bypass_tlb=byp_tlb, pwc=pwc,
-                       walk_vpn=walk_vpn, walk_asid=walk_asid,
-                       walk_done=walk_done, walk_merged=walk_merged_arr),
-            DataState(l2c=l2c, dram=dram, bypass=bp_state),
-            trans_out)
+                       walk=trans.walk),
+            TransProbe(l1_hit=l1_hit, l1_miss=l1_miss, l2_hit=l2_hit,
+                       byp_hit=byp_hit, l2_hit_eff=l2_hit_eff,
+                       need_walk=need_walk, merged=merged,
+                       merge_done=merge_done, first_match=first_match,
+                       new_walk=new_walk, queue_pen=queue_pen,
+                       pwc_lat=pwc_lat, walk_lines=walk_lines,
+                       walk_go=walk_go, walk_tags=walk_tags))
 
 
 # ---------------------------------------------------------------------------
-# stage 3: data path (L1D -> L2$ -> DRAM)
+# stage 2b: data-path front (L1D draw + divergent line generation)
+# ---------------------------------------------------------------------------
+
+class DataFront(NamedTuple):
+    """L1D outcome + the data lanes headed for the shared L2$."""
+    l1d_hit: jax.Array           # (C,) bool
+    go_l2d: jax.Array            # (C,) bool: reached the shared L2$
+    lines: jax.Array             # (DATA_WIDTH*C,) line ids, wave-major
+
+
+def datapath_front(cfg: SimConfig, params_mat, sched: SchedOut, t
+                   ) -> DataFront:
+    """Draw the L1D outcome and generate the divergent line addresses."""
+    pfn = pt_mod.translate(pt_mod.PageTableConfig(), sched.asid, sched.vpn)
+    r = _mix(pfn.astype(jnp.uint32) + sched.pos.astype(jnp.uint32))
+    l1d_hit = (r % jnp.uint32(1024)).astype(jnp.int32) \
+        < params_mat[sched.app, FIELD["l1d_hit_milli"]]
+    # warp-wide (divergent) data access: one memory instruction touches
+    # DATA_WIDTH cache lines, serviced in parallel (latency = max). This is
+    # what gives data traffic its realistic flooding pressure on the shared
+    # L2 relative to page-walk traffic.
+    go_l2d = sched.active & ~l1d_hit
+    lines = []
+    for k in range(DATA_WIDTH):
+        r3 = _mix(r + jnp.uint32((0x85EBCA6B + 0x9E3779B9 * k) & 0xFFFFFFFF))
+        lines.append(pfn * 32 + (r3 % jnp.uint32(32)).astype(jnp.int32))
+    return DataFront(l1d_hit=l1d_hit, go_l2d=go_l2d,
+                     lines=jnp.stack(lines).reshape(DATA_WIDTH * pfn.shape[0]))
+
+
+# ---------------------------------------------------------------------------
+# stage 3: the ONE shared L2$ + DRAM round for all of a cycle's lanes
+# ---------------------------------------------------------------------------
+
+class MemOut(NamedTuple):
+    """Per-core splits of the fused round (walk part + data part)."""
+    walk_lat: jax.Array          # (C,) summed walk-level L2$/DRAM latency
+    dram_tlb_lat: jax.Array      # (C,) float32 DRAM latency on walk path
+    dram_tlb_n: jax.Array        # (C,) int32
+    l2c_tlb_hit: jax.Array       # () walk-request hits in the L2$
+    l2c_tlb_probe: jax.Array     # () walk-request probes of the L2$
+    dlat: jax.Array              # (C,) max-over-lines data latency
+    l2d_hit: jax.Array           # (C,) bool: any data line hit the L2$
+
+
+def shared_memory_access(cfg: SimConfig, data: DataState, app,
+                         walk_lines, walk_go, walk_tags,
+                         data_lines, go_l2d, t) -> Tuple[DataState, MemOut]:
+    """Shared L2 data cache + DRAM for ALL of a cycle's sub-accesses.
+
+    Lanes are flattened wave-major (walk level 0..L-1, then data line
+    0..K-1, each wave C cores wide) so lane order equals the sequential
+    model's program order: `tlb.access_fused` resolves cross-wave fills /
+    forwarding inside one call, and `dram_sched.access`'s in-batch ranking
+    gives walk (golden-class) requests priority over the same cycle's data
+    requests. Either lane group may be empty (compat wrappers below).
+    """
+    des = cfg.design
+    dr = des.dram
+    C = app.shape[0]
+    nw = walk_lines.shape[0]
+    nd = data_lines.shape[0]
+    L, K = nw // C, nd // C
+
+    lines = jnp.concatenate([walk_lines, data_lines])
+    go = jnp.concatenate([walk_go, jnp.tile(go_l2d, K)])
+    apps = jnp.tile(app, L + K)
+    is_tlb = jnp.concatenate([jnp.ones((nw,), bool), jnp.zeros((nd,), bool)])
+    depth = jnp.concatenate([walk_tags, jnp.zeros((nd,), jnp.int32)])
+
+    l2c, dram, bp_state = data.l2c, data.dram, data.bypass
+    if des.bypass.enabled:
+        # depth 0 (data) always fills, so one decision covers every lane
+        may_fill = bp_mod.should_fill(bp_state, depth)
+    else:
+        may_fill = jnp.ones((nw + nd,), bool)
+
+    # `Static` gives each app an equal slice of the sets/channels by
+    # restricting its index range; the spec is static, so the partition
+    # arithmetic traces out entirely for shared designs
+    if des.partition.kind == "static":
+        key = static_partition_index(lines, cfg.l2_sets, cfg.n_apps, apps)
+        channel = static_partition_index(lines, cfg.n_channels,
+                                         cfg.n_apps, apps)
+    else:
+        key = lines % cfg.l2_sets
+        channel = (lines % cfg.n_channels).astype(jnp.int32)
+
+    # reuse TLB machinery: tag = full line id (unique, so the line cache
+    # is tag-only and the ASID plane is skipped entirely)
+    l2c, hit, _ = tlb_mod.access_fused(
+        l2c, lines * cfg.l2_sets + key, jnp.zeros_like(lines), go,
+        may_fill, t, n_waves=max(L + K, 1), track_asids=False)
+    lat = jnp.where(hit, cfg.lat_l2_cache, 0)
+    miss = go & ~hit
+
+    bank = ((lines // cfg.n_channels) % cfg.n_banks).astype(jnp.int32)
+    row = (lines // (cfg.n_channels * cfg.n_banks * 32)).astype(jnp.int32)
+    dram, dram_lat = dram_sched.access(
+        dram, channel, bank, row, apps, is_tlb, miss,
+        mask_enabled=dr.enabled, thres_max=dr.thres_max,
+        waves=max(L + K, 1))
+    lat = lat + jnp.where(miss, cfg.lat_l2_cache + dram_lat, 0)
+    bp_state = bp_mod.record(bp_state, depth, hit, go)
+
+    # ---------------- split back per core ------------------------------
+    zi = jnp.zeros((C,), jnp.int32)
+    zs = jnp.zeros((), jnp.int32)
+    if nw:
+        lat_w = lat[:nw].reshape(L, C)
+        went = walk_go.reshape(L, C) & ~hit[:nw].reshape(L, C)
+        walk_lat = lat_w.sum(0)          # inactive lanes contribute 0
+        dram_tlb_lat = jnp.where(went, lat_w, 0).sum(0).astype(jnp.float32)
+        dram_tlb_n = went.sum(0, dtype=jnp.int32)
+        l2c_tlb_hit = (hit[:nw] & walk_go).sum(dtype=jnp.int32)
+        l2c_tlb_probe = walk_go.sum(dtype=jnp.int32)
+    else:
+        walk_lat, dram_tlb_n, l2c_tlb_hit, l2c_tlb_probe = zi, zi, zs, zs
+        dram_tlb_lat = jnp.zeros((C,), jnp.float32)
+    if nd:
+        dlat = lat[nw:].reshape(K, C).max(0)
+        l2d_hit = hit[nw:].reshape(K, C).any(0)
+    else:
+        dlat = zi
+        l2d_hit = jnp.zeros((C,), bool)
+
+    return (DataState(l2c=l2c, dram=dram, bypass=bp_state),
+            MemOut(walk_lat=walk_lat, dram_tlb_lat=dram_tlb_lat,
+                   dram_tlb_n=dram_tlb_n, l2c_tlb_hit=l2c_tlb_hit,
+                   l2c_tlb_probe=l2c_tlb_probe, dlat=dlat,
+                   l2d_hit=l2d_hit))
+
+
+# ---------------------------------------------------------------------------
+# stage 4: translation commit (walk latency, walk-table install)
+# ---------------------------------------------------------------------------
+
+class TransOut(NamedTuple):
+    """Per-core translation results + walk-level L2$ counters."""
+    trans_lat: jax.Array         # (C,) translation latency
+    l1_hit: jax.Array            # (C,) bool
+    l1_miss: jax.Array
+    l2_hit: jax.Array
+    byp_hit: jax.Array
+    l2_hit_eff: jax.Array        # L2 or bypass-cache hit
+    need_walk: jax.Array
+    merged: jax.Array            # joined an in-flight walk
+    new_walk: jax.Array          # started a fresh walk
+    walk_done_new: jax.Array     # (C,) completion time of fresh walks
+    dram_tlb_lat: jax.Array      # (C,) float32 DRAM latency on walk path
+    dram_tlb_n: jax.Array        # (C,) int32
+    l2c_hit: jax.Array           # () walk-request hits in the L2$
+    l2c_probe: jax.Array         # () walk-request probes of the L2$
+
+
+def translation_commit(cfg: SimConfig, trans: TransState, probe: TransProbe,
+                       mem: MemOut, sched: SchedOut, t
+                       ) -> Tuple[TransState, TransOut]:
+    """Resolve walk latencies, install fresh walks, settle trans latency."""
+    des = cfg.design
+    tr = des.translation
+    C = cfg.n_cores
+
+    if tr.kind == "ideal":
+        trans_lat = jnp.where(sched.active, cfg.lat_l1_tlb, 0)
+        zi = jnp.zeros((C,), jnp.int32)
+        return trans, TransOut(
+            trans_lat=trans_lat, l1_hit=probe.l1_hit, l1_miss=probe.l1_miss,
+            l2_hit=probe.l2_hit, byp_hit=probe.byp_hit,
+            l2_hit_eff=probe.l2_hit_eff, need_walk=probe.need_walk,
+            merged=probe.merged, new_walk=probe.new_walk, walk_done_new=zi,
+            dram_tlb_lat=jnp.zeros((C,), jnp.float32), dram_tlb_n=zi,
+            l2c_hit=jnp.zeros((), jnp.int32),
+            l2c_probe=jnp.zeros((), jnp.int32))
+
+    walk_lat = mem.walk_lat + probe.pwc_lat + probe.queue_pen
+    walk_done_new = t + cfg.lat_l2_tlb + walk_lat
+
+    # install new walks into free slots (expired entries are free); lanes
+    # that install nothing are routed out of bounds and dropped
+    wt = tr.max_concurrent_walks
+    free = trans.walk[:, WDONE] <= t
+    order_slots = jnp.cumsum(probe.new_walk) - 1
+    free_idx = jnp.where(free, jnp.arange(wt), BIG)
+    free_sorted = jnp.sort(free_idx)
+    slot_for = jnp.where(probe.new_walk,
+                         free_sorted[jnp.clip(order_slots, 0, wt - 1)],
+                         BIG)
+    inst = probe.new_walk & (slot_for < wt)
+    slot = jnp.where(inst, slot_for, wt).astype(jnp.int32)
+    rows = jnp.stack([sched.vpn, sched.asid, walk_done_new,
+                      jnp.ones((C,), jnp.int32)], axis=1)      # (C, 4)
+    walk = trans.walk.at[slot].set(rows, mode="drop")
+    # bump merge counters on the joined in-flight walks
+    walk = walk.at[probe.first_match, WMERGED].add(
+        jnp.where(probe.merged, 1, 0))
+
+    # ---------------- translation latency ------------------------------
+    trans_lat = jnp.where(
+        probe.l1_hit, cfg.lat_l1_tlb,
+        jnp.where(probe.l2_hit_eff, cfg.lat_l2_tlb,
+                  jnp.where(probe.merged,
+                            jnp.maximum(probe.merge_done - t, 1),
+                            jnp.maximum(walk_done_new - t, 1))))
+
+    return (trans._replace(walk=walk),
+            TransOut(trans_lat=trans_lat, l1_hit=probe.l1_hit,
+                     l1_miss=probe.l1_miss, l2_hit=probe.l2_hit,
+                     byp_hit=probe.byp_hit, l2_hit_eff=probe.l2_hit_eff,
+                     need_walk=probe.need_walk, merged=probe.merged,
+                     new_walk=probe.new_walk, walk_done_new=walk_done_new,
+                     dram_tlb_lat=mem.dram_tlb_lat,
+                     dram_tlb_n=mem.dram_tlb_n, l2c_hit=mem.l2c_tlb_hit,
+                     l2c_probe=mem.l2c_tlb_probe))
+
+
+# ---------------------------------------------------------------------------
+# compat wrappers: isolated translation / datapath stages (unit tests)
 # ---------------------------------------------------------------------------
 
 class DataOut(NamedTuple):
@@ -429,74 +627,74 @@ class DataOut(NamedTuple):
     l2d_hit: jax.Array           # bool: any of the lines hit the L2$
 
 
+def translation(cfg: SimConfig, trans: TransState, data: DataState,
+                tokens: tok_mod.TokenState, sched: SchedOut, t
+                ) -> Tuple[TransState, DataState, TransOut]:
+    """Full translation in isolation: probe + walk-only memory + commit.
+
+    `step` fuses the walk lanes with the data lanes into one shared
+    memory round instead; this wrapper exercises the same stages with an
+    empty data-lane group, which is convenient for unit tests."""
+    C = cfg.n_cores
+    trans, probe = translation_probe(cfg, trans, tokens, sched, t)
+    data, mem = shared_memory_access(
+        cfg, data, sched.app, probe.walk_lines, probe.walk_go,
+        probe.walk_tags, jnp.zeros((0,), jnp.int32), jnp.zeros((C,), bool),
+        t)
+    trans, tout = translation_commit(cfg, trans, probe, mem, sched, t)
+    return trans, data, tout
+
+
+def _data_out(cfg: SimConfig, front: DataFront, mem: MemOut) -> DataOut:
+    """Assemble the data-path result from the shared-round split."""
+    data_lat = jnp.where(front.l1d_hit, cfg.lat_l1_data,
+                         cfg.lat_l1_data + mem.dlat)
+    return DataOut(data_lat=data_lat, l1d_hit=front.l1d_hit,
+                   go_l2d=front.go_l2d, dlat=mem.dlat, l2d_hit=mem.l2d_hit)
+
+
 def datapath(cfg: SimConfig, data: DataState, params_mat, sched: SchedOut, t
              ) -> Tuple[DataState, DataOut]:
-    """Data access for the translated request (after the TLB hierarchy)."""
-    C = cfg.n_cores
-    l2c, dram, bp_state = data.l2c, data.dram, data.bypass
-    static = jnp.asarray(cfg.design.partition.kind == "static")
-
-    pfn = pt_mod.translate(pt_mod.PageTableConfig(), sched.asid, sched.vpn)
-    r = _mix(pfn.astype(jnp.uint32) + sched.pos.astype(jnp.uint32))
-    l1d_hit = (r % jnp.uint32(1024)).astype(jnp.int32) \
-        < params_mat[sched.app, FIELD["l1d_hit_milli"]]
-    # warp-wide (divergent) data access: one memory instruction touches
-    # DATA_WIDTH cache lines, serviced in parallel (latency = max). This is
-    # what gives data traffic its realistic flooding pressure on the shared
-    # L2 relative to page-walk traffic.
-    go_l2d = sched.active & ~l1d_hit
-    dlat = jnp.zeros((C,), jnp.int32)
-    l2d_hit_any = jnp.zeros((C,), bool)
-    for k in range(DATA_WIDTH):
-        r3 = _mix(r + jnp.uint32((0x85EBCA6B + 0x9E3779B9 * k) & 0xFFFFFFFF))
-        data_line = pfn * 32 + (r3 % jnp.uint32(32)).astype(jnp.int32)
-        l2c, dram, dlat_k, l2d_hit = _l2_cache_access(
-            cfg, l2c, dram, data_line, sched.app, jnp.zeros((C,), bool),
-            jnp.ones((C,), bool), go_l2d, t, static)
-        dlat = jnp.maximum(dlat, dlat_k)
-        l2d_hit_any = l2d_hit_any | l2d_hit
-        bp_state = bp_mod.record(bp_state, jnp.zeros((C,), jnp.int32),
-                                 l2d_hit, go_l2d)
-    data_lat = jnp.where(l1d_hit, cfg.lat_l1_data, cfg.lat_l1_data + dlat)
-    return (DataState(l2c=l2c, dram=dram, bypass=bp_state),
-            DataOut(data_lat=data_lat, l1d_hit=l1d_hit, go_l2d=go_l2d,
-                    dlat=dlat, l2d_hit=l2d_hit_any))
+    """Data path in isolation (empty walk-lane group; see `translation`)."""
+    front = datapath_front(cfg, params_mat, sched, t)
+    data, mem = shared_memory_access(
+        cfg, data, sched.app, jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0,), bool), jnp.zeros((0,), jnp.int32), front.lines,
+        front.go_l2d, t)
+    return data, _data_out(cfg, front, mem)
 
 
 # ---------------------------------------------------------------------------
-# stage 4: statistics accumulation
+# stage 5: statistics accumulation (packed planes, one segment-sum each)
 # ---------------------------------------------------------------------------
 
 def accumulate_stats(stats: StatState, n_apps: int, sched: SchedOut,
                      tout: TransOut, dout: DataOut, t) -> StatState:
-    """Fold one cycle's per-core outcomes into the per-app counters."""
-    oh = jax.nn.one_hot(sched.app, n_apps, dtype=jnp.int32) \
-        * sched.active[:, None]
-    ohf = oh.astype(jnp.float32)
-    psum = lambda x: (oh * x[:, None]).sum(0)  # noqa: E731
-    fsum = lambda x: (ohf * x[:, None]).sum(0)  # noqa: E731
+    """Fold one cycle's per-core outcomes into the packed stat planes."""
+    act = sched.active
+    i32 = lambda x: x.astype(jnp.int32)  # noqa: E731
+    ints_rows = jnp.stack([
+        i32(tout.l1_hit), i32(tout.l1_miss), i32(tout.l2_hit),
+        i32(tout.need_walk), i32(tout.byp_hit),
+        i32(tout.l1_miss & ~tout.l2_hit), i32(tout.new_walk),
+        tout.dram_tlb_n, i32(dout.go_l2d),
+    ], axis=1) * act[:, None].astype(jnp.int32)
+    floats_rows = jnp.stack([
+        jnp.where(tout.new_walk,
+                  (tout.walk_done_new - t).astype(jnp.float32), 0.0),
+        tout.merged.astype(jnp.float32),
+        tout.dram_tlb_lat,
+        jnp.where(dout.go_l2d, dout.dlat, 0).astype(jnp.float32),
+    ], axis=1) * act[:, None].astype(jnp.float32)
     return StatState(
-        s_l1_hit=stats.s_l1_hit + psum(tout.l1_hit),
-        s_l1_miss=stats.s_l1_miss + psum(tout.l1_miss),
-        s_l2_hit=stats.s_l2_hit + psum(tout.l2_hit),
-        s_l2_miss=stats.s_l2_miss + psum(tout.need_walk),
-        s_byp_hit=stats.s_byp_hit + psum(tout.byp_hit),
-        s_byp_probe=stats.s_byp_probe + psum(tout.l1_miss & ~tout.l2_hit),
-        s_walk_lat=stats.s_walk_lat
-        + fsum(jnp.where(tout.new_walk, tout.walk_done_new - t, 0)),
-        s_walks=stats.s_walks + psum(tout.new_walk),
-        s_stall_per_miss=stats.s_stall_per_miss + fsum(tout.merged),
-        s_dram_tlb_lat=stats.s_dram_tlb_lat + fsum(tout.dram_tlb_lat),
-        s_dram_tlb_n=stats.s_dram_tlb_n + psum(tout.dram_tlb_n),
-        s_dram_data_lat=stats.s_dram_data_lat
-        + fsum(jnp.where(dout.go_l2d, dout.dlat, 0)),
-        s_dram_data_n=stats.s_dram_data_n + psum(dout.go_l2d),
-        s_l2c_tlb_hit=stats.s_l2c_tlb_hit + tout.l2c_hit,
-        s_l2c_tlb_probe=stats.s_l2c_tlb_probe + tout.l2c_probe,
-        s_l2c_data_hit=stats.s_l2c_data_hit
-        + (dout.go_l2d & dout.l2d_hit).sum(dtype=jnp.int32),
-        s_l2c_data_probe=stats.s_l2c_data_probe
-        + dout.go_l2d.sum(dtype=jnp.int32),
+        ints=stats.ints + jax.ops.segment_sum(ints_rows, sched.app,
+                                              num_segments=n_apps),
+        floats=stats.floats + jax.ops.segment_sum(floats_rows, sched.app,
+                                                  num_segments=n_apps),
+        scalars=stats.scalars + jnp.stack([
+            tout.l2c_hit, tout.l2c_probe,
+            (dout.go_l2d & dout.l2d_hit).sum(dtype=jnp.int32),
+            dout.go_l2d.sum(dtype=jnp.int32)]),
     )
 
 
@@ -529,13 +727,12 @@ def epoch_maintenance(cfg: SimConfig, trans: TransState,
     def do_epoch(args):
         tokens, dram, bp = args
         warps_per_app = jnp.asarray(cfg.warps_per_app, jnp.int32)
-        conc = jnp.zeros((na,), jnp.int32).at[
-            jnp.clip(trans.walk_asid, 0, na - 1)].add(
-            (trans.walk_done > t).astype(jnp.int32))
-        stalled = jnp.zeros((na,), jnp.int32).at[
-            jnp.clip(trans.walk_asid, 0, na - 1)].add(
-            trans.walk_merged * (trans.walk_done > t))
-        dram = dram_sched.update_pressure(dram, conc, stalled)
+        live = (trans.walk[:, WDONE] > t).astype(jnp.int32)
+        census = jnp.stack([live, trans.walk[:, WMERGED] * live], axis=1)
+        census = jax.ops.segment_sum(
+            census, jnp.clip(trans.walk[:, WASID], 0, na - 1),
+            num_segments=na)
+        dram = dram_sched.update_pressure(dram, census[:, 0], census[:, 1])
         return (tok_mod.epoch_update(tokens, warps_per_app,
                                      step_frac=des.tokens.step_frac), dram,
                 bp_mod.epoch_update(bp))
@@ -557,9 +754,14 @@ def step(cfg: SimConfig, params_mat, state: SimState) -> SimState:
     """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params."""
     t = state.t + 1
     sched = warp_sched(cfg, params_mat, state.stall_until, state.pos, t)
-    trans_st, data_st, tout = translation(
-        cfg, state.trans, state.data, state.tokens, sched, t)
-    data_st, dout = datapath(cfg, data_st, params_mat, sched, t)
+    trans_st, probe = translation_probe(cfg, state.trans, state.tokens,
+                                        sched, t)
+    dfront = datapath_front(cfg, params_mat, sched, t)
+    data_st, mem = shared_memory_access(
+        cfg, state.data, sched.app, probe.walk_lines, probe.walk_go,
+        probe.walk_tags, dfront.lines, dfront.go_l2d, t)
+    trans_st, tout = translation_commit(cfg, trans_st, probe, mem, sched, t)
+    dout = _data_out(cfg, dfront, mem)
 
     gap = params_mat[sched.app, FIELD["gap"]]
     total_lat = tout.trans_lat + dout.data_lat + gap

@@ -62,11 +62,12 @@ def _compiled_batch_run(cfg: SimConfig):
 
 
 def _stats(cfg: SimConfig, st: SimState) -> Dict[str, np.ndarray]:
+    # one bulk transfer for the whole state tree (no-op on numpy trees,
+    # e.g. the per-mix slices run_batch hands over)
+    st = jax.device_get(st)
     na = cfg.n_apps
     warp_app = np.repeat(np.asarray(cfg.app_of_core), cfg.warps_per_core)
-    instr = np.asarray(st.instr)
-    ipc = np.array([instr[warp_app == a].sum() for a in range(na)]) \
-        / float(st.t)
+    ipc = np.bincount(warp_app, weights=st.instr, minlength=na) / float(st.t)
     s = st.stats
     g = lambda x: np.asarray(x, np.float64)  # noqa: E731
     l1p = g(s.s_l1_hit) + g(s.s_l1_miss)
@@ -128,10 +129,12 @@ def run_batch(design: DesignLike,
     cfg = SimConfig(n_apps=sizes.pop(), sim_cycles=cycles,
                     design=as_design(design))
     pm = jnp.asarray(np.stack([_mix_matrix(m) for m in bench_mixes]))
-    final = _compiled_batch_run(cfg)(pm)
+    # one bulk device->host transfer of the whole batched final state,
+    # then cheap numpy views per mix (was B per-mix tree transfers)
+    final = jax.device_get(_compiled_batch_run(cfg)(pm))
     out = []
     for i in range(len(bench_mixes)):
-        sub = jax.tree_util.tree_map(lambda x: np.asarray(x)[i], final)
+        sub = jax.tree_util.tree_map(lambda x: x[i], final)
         out.append(_stats(cfg, sub))
     return out
 
