@@ -1,12 +1,21 @@
 """Simulator throughput microbenchmark -> BENCH_sim.json.
 
-Measures steps/sec of the compiled one-cycle pipeline in three shapes:
+Measures steps/sec of the compiled one-cycle pipeline in four shapes:
 
   2app    — one 2-app mix (the paper's pair setting)
   4app    — one 4-app mix (N-way sharing)
   batch8  — eight 2-app mixes vmapped through one executable
+  grid    — the full 8-design x 2-mix ablation sweep at the sweep-
+            iteration scale (min(--cycles, GRID_CYCLES) cycles): one
+            compiled, vmapped grid execution per static-signature group
+            (two for the paper designs); on trees without the grid path
+            it falls back to the per-design loop. Under `--compare`
+            this scenario is timed END-TO-END from cold — compile +
+            execute at a fresh cycle count per round — because the
+            sweep's dominant cost at this scale is its XLA compiles (8
+            programs pre-vectorization vs one per signature group)
 
-The three scenarios are interleaved round-robin inside ONE process and
+The scenarios are interleaved round-robin inside ONE process and
 the median per-scenario rate is reported: this box's absolute throughput
 drifts with neighbor load, so sequential before/after blocks are not
 comparable — interleaving keeps the scenarios under the same drift, and
@@ -19,6 +28,11 @@ package, both versions are compiled into THIS process, and each round
 times them back-to-back (pair-by-pair) so neighbor drift hits both
 sides equally; the reported number is the median new/old speedup per
 scenario, never a cross-run absolute.
+
+Compiles are cached persistently under `.jax_cache/` (repo root) so
+repeated invocations skip XLA recompiles; disable with
+`--no-compile-cache`. `--compare` removes its materialized baseline
+tree on exit unless `--keep-baseline`.
 
 Run:  PYTHONPATH=src python -m benchmarks.perf [--cycles N] [--rounds R]
       PYTHONPATH=src python -m benchmarks.perf --compare HEAD
@@ -44,15 +58,50 @@ import numpy as np
 REPO_ROOT = Path(__file__).resolve().parent.parent
 OUT_PATH = REPO_ROOT / "BENCH_sim.json"
 COMPARE_DIR = REPO_ROOT / ".bench_compare"
+CACHE_DIR = REPO_ROOT / ".jax_cache"
 _IMPORT_RE = re.compile(r"^(\s*(?:from|import)\s+)repro(?=[.\s])",
                         re.MULTILINE)
+GRID_N_MIXES = 2     # grid scenario: all 8 paper designs x this many pairs
+# The grid scenario runs at min(--cycles, GRID_CYCLES): it benchmarks the
+# sweep-harness shape that design-vectorization targets — short iterative
+# sweeps (CI smoke, test goldens, dev loops) where the 8-vs-2 XLA compiles
+# dominate wall time. At paper scale (60K cycles) a sweep is
+# execution-bound and the vmapped grid is execution-neutral on this box
+# (flat per-sim batch scaling, measured G=2..14; see README), so the
+# saving there is the fixed compile time, not a proportional factor.
+GRID_CYCLES = 2_000
 
 
-def _scenarios(design: str, cycles: int, pkg: str = "repro"):
+def enable_compilation_cache(cache_dir: Path = CACHE_DIR) -> None:
+    """Enable JAX's persistent compilation cache under `cache_dir` so
+    repeated benchmark invocations skip recompiles (opt out with
+    --no-compile-cache; see README "Performance")."""
+    jax.config.update("jax_compilation_cache_dir", str(cache_dir))
+    # cache every entry, however small/fast — sim compiles are the cost
+    # (0, not the default 1s: CI-smoke-scale programs compile sub-second)
+    jax.config.update("jax_persistent_cache_min_entry_size_bytes", -1)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
+
+
+def _signature_groups(pkg: str = "repro"):
+    """Count of static-signature groups over the paper's 8 designs, or
+    None for trees that predate the static/traced design split."""
+    design_mod = importlib.import_module(pkg + ".core.design")
+    mask_mod = importlib.import_module(pkg + ".core.mask")
+    if not hasattr(design_mod, "static_signature"):
+        return None
+    return len({design_mod.static_signature(design_mod.get_design(n))
+                for n in mask_mod.ALL_DESIGNS})
+
+
+def _scenarios(design: str, cycles: int, pkg: str = "repro",
+               include_grid: bool = True):
     """name -> (zero-arg compiled call, sim-steps per call).
 
     `pkg` selects the simulator package ("repro" or a baseline copy such
     as "repro_base") so two versions can be timed in one process.
+    `include_grid=False` skips building the grid scenario (the compare
+    harness times grid sweeps cold via `_grid_sweep` instead).
     """
     import jax.numpy as jnp
     config_mod = importlib.import_module(pkg + ".sim.config")
@@ -77,11 +126,63 @@ def _scenarios(design: str, cycles: int, pkg: str = "repro"):
         return (lambda: jax.block_until_ready(fn(pm))), cycles * len(mixes)
 
     mix4 = workloads_mod.mix_workloads(seed=7, n_mixes=1, n_apps=4)[0]
-    return {
+    scen = {
         "2app": single(["3DS", "BLK"]),
         "4app": single(list(mix4)),
         "batch8": batch(workloads_mod.pair_workloads()[:8]),
     }
+    if include_grid:
+        scen["grid"] = _grid_sweep(pkg, min(cycles, GRID_CYCLES))
+    return scen
+
+
+def _grid_sweep(pkg: str, cycles: int):
+    """The paper's 8-design ablation sweep over GRID_N_MIXES pairs:
+    (zero-arg call, sim-steps). The call compiles lazily on first use,
+    so timing a FRESH `cycles` value measures the sweep end-to-end
+    (compile + execute) — the compare harness exploits this.
+
+    On grid-capable trees: one vmapped execution per signature group.
+    On older trees: the per-design loop (one vmapped mix batch per
+    design) — the honest pre-vectorization sweep shape. Both run the
+    identical designs x mixes work."""
+    import jax.numpy as jnp
+    config_mod = importlib.import_module(pkg + ".sim.config")
+    runner_mod = importlib.import_module(pkg + ".sim.runner")
+    workloads_mod = importlib.import_module(pkg + ".sim.workloads")
+    design_mod = importlib.import_module(pkg + ".core.design")
+    mask_mod = importlib.import_module(pkg + ".core.mask")
+
+    names = list(mask_mod.ALL_DESIGNS)
+    mixes = workloads_mod.pair_workloads()[:GRID_N_MIXES]
+    steps = cycles * len(names) * len(mixes)
+    pms = np.stack([runner_mod._mix_matrix(list(m)) for m in mixes])
+    calls = []
+    if hasattr(runner_mod, "_compiled_grid_run"):
+        groups = {}
+        for n in names:
+            dd = design_mod.get_design(n)
+            groups.setdefault(design_mod.static_signature(dd),
+                              []).append(dd)
+        for sig, gds in groups.items():
+            ccfg = config_mod.SimConfig(
+                n_apps=2, sim_cycles=cycles,
+                design=design_mod.canonical_design(sig))
+            dp_stack = jax.tree_util.tree_map(
+                lambda *leaves: jnp.repeat(jnp.stack(leaves),
+                                           len(mixes), axis=0),
+                *[design_mod.design_params(dd) for dd in gds])
+            pm_stack = jnp.asarray(np.tile(pms, (len(gds), 1, 1)))
+            fn = runner_mod._compiled_grid_run(ccfg)
+            calls.append((fn, (dp_stack, pm_stack)))
+    else:
+        for n in names:
+            cfg = config_mod.SimConfig(n_apps=2, sim_cycles=cycles,
+                                       design=design_mod.get_design(n))
+            calls.append((runner_mod._compiled_batch_run(cfg),
+                          (jnp.asarray(pms),)))
+    return (lambda: [jax.block_until_ready(fn(*args))
+                     for fn, args in calls]), steps
 
 
 # ---------------------------------------------------------------------------
@@ -124,57 +225,99 @@ def _materialize_baseline(ref: str) -> str:
 
 
 def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
-                rounds: int = 5, out_path: Path = OUT_PATH) -> dict:
+                rounds: int = 5, out_path: Path = OUT_PATH,
+                keep_baseline: bool = False) -> dict:
     """Interleaved A/B: current tree vs the committed tree at `ref`.
 
     Each round times (new, old) back-to-back per scenario; the headline
     number is the median over rounds of old_time / new_time (>1 means
-    the working tree is faster)."""
-    sha = _materialize_baseline(ref)
-    scen_new = _scenarios(design, cycles, "repro")
-    scen_old = _scenarios(design, cycles, "repro_base")
-    for name in scen_new:                  # compile + warm both sides
-        for tag, scen in (("new", scen_new), ("old", scen_old)):
-            t0 = time.perf_counter()
-            scen[name][0]()
-            print(f"# warm {name}/{tag}: {time.perf_counter() - t0:.1f}s",
-                  flush=True)
+    the working tree is faster).
 
-    ratios = {name: [] for name in scen_new}
-    rates = {name: {"new": [], "old": []} for name in scen_new}
-    for r in range(rounds):
-        for name in scen_new:
-            call_new, steps = scen_new[name]
-            call_old, _ = scen_old[name]
+    The warm scenarios (2app/4app/batch8) time pre-compiled execution.
+    The `grid` scenario instead times the 8-design sweep END-TO-END —
+    compile + execute, at a fresh cycle count every round so neither
+    side can reuse a compiled program — because the sweep's real cost
+    includes its XLA compiles (8 programs pre-vectorization, one per
+    signature group after). The persistent compilation cache is
+    disabled for the whole compare run for the same reason. The
+    materialized baseline tree under `.bench_compare/` is removed on
+    exit unless `keep_baseline`."""
+    try:
+        sha = _materialize_baseline(ref)
+        jax.config.update("jax_compilation_cache_dir", None)
+        print("# persistent compilation cache disabled for --compare "
+              "(grid rounds time cold compiles)", flush=True)
+        scen_new = _scenarios(design, cycles, "repro", include_grid=False)
+        scen_old = _scenarios(design, cycles, "repro_base",
+                              include_grid=False)
+        warm_names = list(scen_new)
+        for name in warm_names:            # compile + warm both sides
+            for tag, scen in (("new", scen_new), ("old", scen_old)):
+                t0 = time.perf_counter()
+                scen[name][0]()
+                print(f"# warm {name}/{tag}: "
+                      f"{time.perf_counter() - t0:.1f}s", flush=True)
+
+        names = warm_names + ["grid"]
+        ratios = {name: [] for name in names}
+        rates = {name: {"new": [], "old": []} for name in names}
+        for r in range(rounds):
+            for name in warm_names:
+                call_new, steps = scen_new[name]
+                call_old, _ = scen_old[name]
+                t0 = time.perf_counter()
+                call_new()
+                t_new = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                call_old()
+                t_old = time.perf_counter() - t0
+                ratios[name].append(t_old / t_new)
+                rates[name]["new"].append(steps / t_new)
+                rates[name]["old"].append(steps / t_old)
+            # grid: cold end-to-end sweep, fresh cycles -> fresh compiles
+            gc = min(cycles, GRID_CYCLES) + r + 1
+            call_new, gsteps = _grid_sweep("repro", gc)
+            call_old, _ = _grid_sweep("repro_base", gc)
             t0 = time.perf_counter()
             call_new()
             t_new = time.perf_counter() - t0
             t0 = time.perf_counter()
             call_old()
             t_old = time.perf_counter() - t0
-            ratios[name].append(t_old / t_new)
-            rates[name]["new"].append(steps / t_new)
-            rates[name]["old"].append(steps / t_old)
-        print(f"# compare round {r + 1}/{rounds} done", flush=True)
+            ratios["grid"].append(t_old / t_new)
+            rates["grid"]["new"].append(gsteps / t_new)
+            rates["grid"]["old"].append(gsteps / t_old)
+            print(f"# compare round {r + 1}/{rounds} done "
+                  f"(grid cold: new {t_new:.1f}s old {t_old:.1f}s)",
+                  flush=True)
 
-    result = _measure_report(design, cycles, rounds,
-                             {n: rates[n]["new"] for n in rates})
-    result["compare"] = {
-        "ref": ref,
-        "sha": sha,
-        "speedup": {n: float(np.median(v)) for n, v in ratios.items()},
-        "ratio_samples": {n: [float(x) for x in v]
-                          for n, v in ratios.items()},
-        "baseline_steps_per_sec": {n: float(np.median(rates[n]["old"]))
-                                   for n in rates},
-    }
-    out_path.write_text(json.dumps(result, indent=2) + "\n")
-    print(json.dumps({"design": design, "cycles": cycles,
-                      "steps_per_sec": result["steps_per_sec"],
-                      "speedup_vs_" + sha[:8]: result["compare"]["speedup"]},
-                     indent=2))
-    print(f"# wrote {out_path}")
-    return result
+        result = _measure_report(design, cycles, rounds,
+                                 {n: rates[n]["new"] for n in rates})
+        result["compare"] = {
+            "ref": ref,
+            "sha": sha,
+            "speedup": {n: float(np.median(v)) for n, v in ratios.items()},
+            "ratio_samples": {n: [float(x) for x in v]
+                              for n, v in ratios.items()},
+            "baseline_steps_per_sec": {n: float(np.median(rates[n]["old"]))
+                                       for n in rates},
+            "baseline_signature_groups": _signature_groups("repro_base"),
+            "grid_timing": "cold end-to-end sweep (compile + execute, "
+                           "fresh cycle count per round)",
+        }
+        out_path.write_text(json.dumps(result, indent=2) + "\n")
+        print(json.dumps(
+            {"design": design, "cycles": cycles,
+             "steps_per_sec": result["steps_per_sec"],
+             "speedup_vs_" + sha[:8]: result["compare"]["speedup"]},
+            indent=2))
+        print(f"# wrote {out_path}")
+        return result
+    finally:
+        if not keep_baseline:
+            shutil.rmtree(COMPARE_DIR, ignore_errors=True)
+            print(f"# removed {COMPARE_DIR} (use --keep-baseline to keep)",
+                  flush=True)
 
 
 def _measure_report(design, cycles, rounds, samples) -> dict:
@@ -188,6 +331,8 @@ def _measure_report(design, cycles, rounds, samples) -> dict:
             "jax": jax.__version__,
             "platform": platform.platform(),
             "backend": jax.default_backend(),
+            # compiled programs for the grid scenario's 8-design sweep
+            "signature_groups": _signature_groups("repro"),
         },
     }
 
@@ -226,10 +371,18 @@ def main() -> None:
     ap.add_argument("--compare", metavar="GIT_REF", default=None,
                     help="interleave against the committed tree at GIT_REF "
                          "and report median new/old speedups")
+    ap.add_argument("--keep-baseline", action="store_true",
+                    help="keep the materialized .bench_compare/ baseline "
+                         "tree after --compare (default: removed on exit)")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="disable the persistent JAX compilation cache "
+                         "(default: cache compiles under .jax_cache/)")
     args = ap.parse_args()
+    if not args.no_compile_cache:
+        enable_compilation_cache()
     if args.compare:
         run_compare(args.compare, args.design, args.cycles, args.rounds,
-                    args.out)
+                    args.out, keep_baseline=args.keep_baseline)
     else:
         run_bench(args.design, args.cycles, args.rounds, args.out)
 

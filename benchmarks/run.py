@@ -129,7 +129,15 @@ def main() -> None:
     ap.add_argument("--list-designs", action="store_true")
     ap.add_argument("--only", nargs="*", default=None)
     ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-compile-cache", action="store_true",
+                    help="disable the persistent JAX compilation cache "
+                         "(default: cache compiles under .jax_cache/ so "
+                         "re-runs skip recompiles; see README)")
     args = ap.parse_args()
+
+    if not args.no_compile_cache:
+        from benchmarks.perf import enable_compilation_cache
+        enable_compilation_cache()
 
     if args.kernels:
         run_kernels()

@@ -38,8 +38,9 @@ my_design = get_design("mask").with_(name="mask-lean",
                                      bypass=dict(enabled=False))
 register_design(my_design)
 
-# sweep = one Experiment per design; solo baselines (IPC_alone) are
-# batched into the same compile, so weighted speedup comes for free
+# sweep groups designs by static signature and runs each group's whole
+# design x mix grid (solo IPC_alone baselines included) as ONE compiled,
+# vmapped execution — these three designs share a single program
 for res in sweep(["gpu-mmu", "mask", "mask-lean"],
                  [("3DS", "BLK")], cycles=9000).values():
     r = res[0]

@@ -33,7 +33,10 @@ and the `design(name)` / `ALL_DESIGNS` shims on top of this registry.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Tuple
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
 
 # translation organizations (paper Fig. 2a/2b + the ideal upper bound)
 TRANSLATION_KINDS = ("ideal", "pwc", "shared_l2_tlb", "walk_only")
@@ -199,6 +202,114 @@ class Design:
             walk_levels=self.translation.walk_levels,
             max_concurrent_walks=self.translation.max_concurrent_walks,
         )
+
+
+# ---------------------------------------------------------------------------
+# static / traced split: StaticSignature + DesignParams
+# ---------------------------------------------------------------------------
+# A Design splits into two planes:
+#
+#   * the STATIC SIGNATURE — every field that changes array shapes or the
+#     traced program structure (cache sizing, walk depth, walk-table size,
+#     epoch length, and whether translation is "ideal", which traces the
+#     whole walk machinery out of the program). Designs sharing a
+#     signature share ONE compiled executable.
+#   * the traced DESIGN PARAMS — every remaining knob (policy booleans,
+#     token budgets, hill-climb step, DRAM quota ceiling), packed as a
+#     small pytree of scalars and fed to the compiled program as inputs.
+#     The memsys stages select on them with `jnp.where`, so a whole
+#     design x mix grid can be vmapped through one executable.
+
+
+@dataclasses.dataclass(frozen=True)
+class StaticSignature:
+    """The compile-relevant plane of a Design (hashable compile key).
+
+    Two designs with equal signatures are guaranteed to lower to the same
+    XLA program; everything else about them rides in `DesignParams`.
+    """
+
+    ideal: bool                   # "ideal" translation traces out the walks
+    l1_entries: int
+    l2_entries: int
+    l2_ways: int
+    walk_levels: int
+    max_concurrent_walks: int
+    bypass_cache_entries: int
+    epoch_cycles: int
+
+
+def static_signature(d) -> StaticSignature:
+    """The static (shape/structure) plane of a design — the compile key."""
+    d = as_design(d)
+    tr = d.translation
+    return StaticSignature(
+        ideal=tr.kind == "ideal",
+        l1_entries=tr.l1_entries,
+        l2_entries=tr.l2_entries,
+        l2_ways=tr.l2_ways,
+        walk_levels=tr.walk_levels,
+        max_concurrent_walks=tr.max_concurrent_walks,
+        bypass_cache_entries=d.tokens.bypass_cache_entries,
+        epoch_cycles=d.epoch_cycles,
+    )
+
+
+def canonical_design(sig: StaticSignature) -> Design:
+    """The canonical representative `Design` of a signature group.
+
+    Deterministic in the signature, so configs built from it compare/hash
+    equal and key one shared compile-cache entry per group. Its dynamic
+    fields are placeholders: the simulator must read those from
+    `DesignParams` only (the float-hex goldens enforce this — a stage
+    reading a placeholder statically would collapse all same-signature
+    designs onto one behavior)."""
+    kind = "ideal" if sig.ideal else "shared_l2_tlb"
+    return Design(
+        name=f"__sig:{'ideal' if sig.ideal else 'std'}__",
+        translation=TranslationSpec(
+            kind=kind, l1_entries=sig.l1_entries,
+            l2_entries=sig.l2_entries, l2_ways=sig.l2_ways,
+            walk_levels=sig.walk_levels,
+            max_concurrent_walks=sig.max_concurrent_walks),
+        tokens=TokenSpec(bypass_cache_entries=sig.bypass_cache_entries),
+        epoch_cycles=sig.epoch_cycles,
+    )
+
+
+class DesignParams(NamedTuple):
+    """The traced plane of a Design: scalar knobs fed to the compiled sim.
+
+    All leaves are 0-d jax arrays so a stack of designs is just a leading
+    axis + vmap. Policy selectors are booleans the stages `jnp.where` on
+    (masked TLB probes/fills are state no-ops), never Python branches.
+    """
+
+    use_l2_tlb: jax.Array       # () bool: shared L2 TLB organization
+    use_pwc: jax.Array          # () bool: page-walk-cache organization
+    tokens_on: jax.Array        # () bool: TLB-Fill Tokens (§5.2)
+    initial_frac: jax.Array     # () float32 initial token fraction
+    step_frac: jax.Array        # () float32 hill-climb step
+    bypass_on: jax.Array        # () bool: L2 data-cache bypass (§5.3)
+    dram_on: jax.Array          # () bool: MASK DRAM scheduler (§5.4)
+    thres_max: jax.Array        # () int32 Eq. (1) quota ceiling
+    static_part: jax.Array      # () bool: static L2$/DRAM partitioning
+
+
+def design_params(d) -> DesignParams:
+    """Pack a design's dynamic knobs into the traced `DesignParams` plane."""
+    d = as_design(d)
+    return DesignParams(
+        use_l2_tlb=jnp.asarray(d.translation.kind == "shared_l2_tlb", bool),
+        use_pwc=jnp.asarray(d.translation.kind == "pwc", bool),
+        tokens_on=jnp.asarray(d.tokens.enabled, bool),
+        initial_frac=jnp.asarray(d.tokens.initial_frac, jnp.float32),
+        step_frac=jnp.asarray(d.tokens.step_frac, jnp.float32),
+        bypass_on=jnp.asarray(d.bypass.enabled, bool),
+        dram_on=jnp.asarray(d.dram.enabled, bool),
+        thres_max=jnp.asarray(d.dram.thres_max, jnp.int32),
+        static_part=jnp.asarray(d.partition.kind == "static", bool),
+    )
 
 
 def from_legacy(dp) -> Design:

@@ -46,25 +46,31 @@ def init(n_channels: int, n_banks: int, n_apps: int) -> DramState:
     )
 
 
-def silver_quota(state: DramState, thres_max: int = 500) -> jax.Array:
+def silver_quota(state: DramState, thres_max=500) -> jax.Array:
     """(n_apps,) Eq. (1) thresholds."""
     w = (state.conc_walks * state.warps_stalled).astype(jnp.float32)
     tot = jnp.maximum(w.sum(), 1.0)
     return jnp.maximum((thres_max * w / tot).astype(jnp.int32), 1)
 
 
-def classify(state: DramState, app, is_tlb, mask_enabled: bool):
-    """queue class per request: 0 golden, 1 silver, 2 normal."""
-    if not mask_enabled:
-        return jnp.full(app.shape, 2, jnp.int32)
+def classify(state: DramState, app, is_tlb, mask_enabled):
+    """queue class per request: 0 golden, 1 silver, 2 normal.
+
+    `mask_enabled` may be a Python bool or a traced boolean scalar (the
+    design-vectorized grid feeds it from `DesignParams`); disabled means
+    one FR-FCFS queue, i.e. everything is class 2."""
     silver = (app == state.silver_app)
-    return jnp.where(is_tlb, 0, jnp.where(silver, 1, 2))
+    cls = jnp.where(is_tlb, 0, jnp.where(silver, 1, 2)).astype(jnp.int32)
+    return jnp.where(mask_enabled, cls, jnp.int32(2))
 
 
 def access(state: DramState, channel, bank, row, app, is_tlb, active,
-           mask_enabled: bool, thres_max: int = 500,
+           mask_enabled, thres_max=500,
            fr_fcfs: bool = True, waves: int = 1) -> Tuple[DramState, jax.Array]:
     """Batched DRAM access model. All args (N,). Returns (state', latency (N,)).
+
+    `mask_enabled` / `thres_max` may be Python values or traced scalars
+    (see `classify`), so one compiled program serves every design point.
 
     Latency = service (row hit/miss) + queueing: number of requests this
     step that rank ahead of you on the same channel (priority-class first,

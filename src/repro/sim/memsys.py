@@ -30,11 +30,18 @@ result NamedTuple so every layer is individually unit-testable:
 `step` is a thin composition of those stages plus warp retire and epoch
 maintenance. Every design point (ideal / PWC / GPU-MMU / Static /
 MASK±components, plus any user-registered composition) is this same
-pipeline dispatched by the per-layer policy specs of
-`repro.core.design.Design` — stages read `cfg.design.translation` /
-`.partition` / `.tokens` / `.bypass` / `.dram` (static, jit-hashable)
-and never ad-hoc flag bags — and `n_apps` is arbitrary: the paper's
-2-app pairs are just N=2.
+pipeline, dispatched on the design's two planes (`repro.core.design`):
+
+  * the STATIC SIGNATURE (`cfg.design` — sizing, walk depth/table, epoch
+    length, ideal-vs-not) picks the traced program structure; `cfg` is
+    expected to carry the signature group's canonical design;
+  * the traced `DesignParams` plane (`dp` — policy booleans, token
+    budgets, DRAM quota ceiling) is selected on with `jnp.where` and
+    masked probes/fills, never Python branches, so ONE compiled program
+    serves every design in a signature group and a whole design x mix
+    grid can be vmapped through it.
+
+`n_apps` is arbitrary: the paper's 2-app pairs are just N=2.
 
 All translation caches (L1 bank, L2 TLB, bypass cache, PWC, and the
 line-addressed L2 data cache) share `core/tlb.py`'s probe/fill machinery;
@@ -55,6 +62,7 @@ from repro.core import dram_sched
 from repro.core import page_table as pt_mod
 from repro.core import tlb as tlb_mod
 from repro.core import tokens as tok_mod
+from repro.core.design import DesignParams
 from repro.core.mask import static_partition_index
 from repro.core.page_table import _mix
 from repro.sim.config import SimConfig
@@ -190,7 +198,7 @@ def init_stats(n_apps: int) -> StatState:
     )
 
 
-def init_state(cfg: SimConfig) -> SimState:
+def init_state(cfg: SimConfig, dp: DesignParams) -> SimState:
     W = cfg.total_warps
     return SimState(
         t=jnp.zeros((), jnp.int32),
@@ -201,7 +209,7 @@ def init_state(cfg: SimConfig) -> SimState:
         data=init_data(cfg),
         tokens=tok_mod.init(cfg.n_apps,
                             jnp.asarray(cfg.warps_per_app, jnp.int32),
-                            cfg.design.tokens.initial_frac),
+                            dp.initial_frac),
         stats=init_stats(cfg.n_apps),
     )
 
@@ -268,20 +276,19 @@ class TransProbe(NamedTuple):
     walk_tags: jax.Array         # (L*C,) page-walk depth tags (§5.3)
 
 
-def translation_probe(cfg: SimConfig, trans: TransState,
+def translation_probe(cfg: SimConfig, dp: DesignParams, trans: TransState,
                       tokens: tok_mod.TokenState, sched: SchedOut, t
                       ) -> Tuple[TransState, TransProbe]:
     """TLB hierarchy probes/fills + page-walk lane generation.
 
-    Dispatch is by the translation/tokens policy specs: the spec fields
-    are static Python values, so each design compiles to a specialized
-    pipeline with the unused paths traced out."""
-    des = cfg.design
-    tr = des.translation
+    Structural dispatch (ideal-vs-not) is by the static signature carried
+    in `cfg.design`; every policy knob below that — shared-L2-TLB vs PWC
+    vs walk-only organization, tokens on/off — is a traced `dp` flag
+    selected with masked probes/fills (a probe or fill whose active mask
+    is all-False is a state no-op), so all non-ideal designs share one
+    compiled pipeline."""
+    tr = cfg.design.translation
     ideal = tr.kind == "ideal"
-    use_pwc = tr.kind == "pwc"
-    use_l2tlb = tr.kind == "shared_l2_tlb"
-    tokens_on = des.tokens.enabled
     C = cfg.n_cores
     vpn, asid, active = sched.vpn, sched.asid, sched.active
 
@@ -291,56 +298,62 @@ def translation_probe(cfg: SimConfig, trans: TransState,
         l1_hit = active
     l1_miss = active & ~l1_hit
 
-    # ---------------- shared L2 TLB + bypass cache ---------------------
-    l2tlb, byp_tlb = trans.l2tlb, trans.bypass_tlb
-    if use_l2tlb:
-        l2tlb, l2_hit = tlb_mod.probe(l2tlb, vpn, asid, l1_miss, t)
-        if tokens_on:
-            byp_tlb, byp_hit = tlb_mod.probe(byp_tlb, vpn, asid,
-                                             l1_miss & ~l2_hit, t)
-            l2_hit_eff = l2_hit | byp_hit
-        else:
-            byp_hit = jnp.zeros_like(l2_hit)
-            l2_hit_eff = l2_hit
-    else:
-        l2_hit = jnp.zeros_like(l1_miss)
-        byp_hit = jnp.zeros_like(l1_miss)
-        l2_hit_eff = l2_hit
-
-    need_walk = l1_miss & ~l2_hit_eff
-
-    # ---------------- TLB fills on walk return -------------------------
-    # (independent of the walk's memory latency, so they live here)
-    if use_l2tlb:
-        if tokens_on:
-            # tokens are distributed round-robin over the app's cores in
-            # warpID order: per-core allowance = tokens / cores_per_app
-            cores_per_app = jnp.asarray(cfg.cores_per_app, jnp.int32)
-            tok_per_core = tokens.tokens[sched.app] // cores_per_app[sched.app]
-            has_tok = sched.slot < tok_per_core
-            fill_l2 = need_walk & has_tok & ~tokens.first_epoch
-            fill_l2 = fill_l2 | (need_walk & tokens.first_epoch)
-            fill_byp = need_walk & ~fill_l2
-            byp_tlb = tlb_mod.fill(byp_tlb, vpn, asid, fill_byp, t)
-        else:
-            fill_l2 = need_walk
-        l2tlb = tlb_mod.fill(l2tlb, vpn, asid, fill_l2, t)
-
     zb = jnp.zeros((C,), bool)
     zi = jnp.zeros((C,), jnp.int32)
     if ideal:
+        l2_hit = jnp.zeros_like(l1_miss)
+        need_walk = l1_miss          # identically False (l1_hit == active)
         # need_walk is identically False: the walk lanes, MSHR table, and
         # walker queue model all trace out of the compiled graph
-        return (TransState(l1=l1, l2tlb=l2tlb, bypass_tlb=byp_tlb,
+        return (TransState(l1=l1, l2tlb=trans.l2tlb,
+                           bypass_tlb=trans.bypass_tlb,
                            pwc=trans.pwc, walk=trans.walk),
                 TransProbe(l1_hit=l1_hit, l1_miss=l1_miss, l2_hit=l2_hit,
-                           byp_hit=byp_hit, l2_hit_eff=l2_hit_eff,
+                           byp_hit=jnp.zeros_like(l2_hit),
+                           l2_hit_eff=l2_hit,
                            need_walk=need_walk, merged=zb, merge_done=zi,
                            first_match=zi, new_walk=zb, queue_pen=zi,
                            pwc_lat=zi,
                            walk_lines=jnp.zeros((0,), jnp.int32),
                            walk_go=jnp.zeros((0,), bool),
                            walk_tags=jnp.zeros((0,), jnp.int32)))
+
+    # ---------------- shared L2 TLB + bypass cache ---------------------
+    # organization selectors are traced: non-participating caches are
+    # probed/filled with an all-False mask (a state no-op yielding
+    # all-False hits) — identical to skipping them. The bypass cache is
+    # additionally wrapped in a lax.cond so token-less designs skip its
+    # work at runtime (under a design-batched vmap the cond becomes a
+    # select, which computes both branches but picks identical values)
+    use_l2 = dp.use_l2_tlb
+    l2tlb, l2_hit = tlb_mod.probe(trans.l2tlb, vpn, asid,
+                                  l1_miss & use_l2, t)
+    byp_tlb, byp_hit = jax.lax.cond(
+        dp.tokens_on & use_l2,
+        lambda st: tlb_mod.probe(st, vpn, asid, l1_miss & ~l2_hit, t),
+        lambda st: (st, jnp.zeros_like(l1_miss)),
+        trans.bypass_tlb)
+    l2_hit_eff = l2_hit | byp_hit
+    need_walk = l1_miss & ~l2_hit_eff
+
+    # ---------------- TLB fills on walk return -------------------------
+    # (independent of the walk's memory latency, so they live here).
+    # Tokens are distributed round-robin over the app's cores in warpID
+    # order: per-core allowance = tokens / cores_per_app. With tokens off
+    # the gate is identically True (every walk may fill the L2 TLB).
+    cores_per_app = jnp.asarray(cfg.cores_per_app, jnp.int32)
+    tok_per_core = tokens.tokens[sched.app] // cores_per_app[sched.app]
+    has_tok = sched.slot < tok_per_core
+    gate = jnp.where(dp.tokens_on,
+                     (has_tok & ~tokens.first_epoch) | tokens.first_epoch,
+                     True)
+    fill_l2 = need_walk & use_l2 & gate
+    fill_byp = need_walk & use_l2 & ~gate    # ~gate implies tokens_on
+    byp_tlb = jax.lax.cond(
+        dp.tokens_on & use_l2,
+        lambda st: tlb_mod.fill(st, vpn, asid, fill_byp, t),
+        lambda st: st, byp_tlb)
+    l2tlb = tlb_mod.fill(l2tlb, vpn, asid, fill_l2, t)
 
     l1 = tlb_mod.fill_bank(l1, vpn, asid, l1_miss, t)
 
@@ -372,19 +385,22 @@ def translation_probe(cfg: SimConfig, trans: TransState,
     walk_tags = jnp.repeat(jnp.asarray(
         [pt_mod.walk_depth_tag(lv) for lv in range(L)], jnp.int32), C)
 
-    pwc = trans.pwc
-    pwc_lat = zi
-    if use_pwc:
-        # fused probe+fill with per-(set, level) fill ports — PTE lines are
-        # unique across levels, so the PWC is tag-only too
-        pwc, pwc_hit, _ = tlb_mod.access_fused(
-            pwc, walk_lines, jnp.zeros_like(walk_lines), walk_active,
-            jnp.ones((L * C,), bool), t, n_waves=L, track_asids=False)
-        walk_go = walk_active & ~pwc_hit
-        pwc_lat = 5 * (walk_active & pwc_hit).reshape(L, C) \
-            .sum(0, dtype=jnp.int32)
-    else:
-        walk_go = walk_active
+    # fused probe+fill with per-(set, level) fill ports — PTE lines are
+    # unique across levels, so the PWC is tag-only too. The organization
+    # selector is a lax.cond so non-PWC designs skip the whole PWC round
+    # at runtime (pwc_hit all-False makes the lines below reduce to
+    # walk_go = walk_active, pwc_lat = 0); under a design-batched vmap
+    # the cond lowers to a select over identical per-design values.
+    pwc, pwc_hit = jax.lax.cond(
+        dp.use_pwc,
+        lambda st: tlb_mod.access_fused(
+            st, walk_lines, jnp.zeros_like(walk_lines), walk_active,
+            jnp.ones((L * C,), bool), t, n_waves=L, track_asids=False)[:2],
+        lambda st: (st, jnp.zeros((L * C,), bool)),
+        trans.pwc)
+    walk_go = walk_active & ~pwc_hit
+    pwc_lat = 5 * (walk_active & pwc_hit).reshape(L, C) \
+        .sum(0, dtype=jnp.int32)
 
     return (TransState(l1=l1, l2tlb=l2tlb, bypass_tlb=byp_tlb, pwc=pwc,
                        walk=trans.walk),
@@ -443,8 +459,8 @@ class MemOut(NamedTuple):
     l2d_hit: jax.Array           # (C,) bool: any data line hit the L2$
 
 
-def shared_memory_access(cfg: SimConfig, data: DataState, app,
-                         walk_lines, walk_go, walk_tags,
+def shared_memory_access(cfg: SimConfig, dp: DesignParams, data: DataState,
+                         app, walk_lines, walk_go, walk_tags,
                          data_lines, go_l2d, t) -> Tuple[DataState, MemOut]:
     """Shared L2 data cache + DRAM for ALL of a cycle's sub-accesses.
 
@@ -453,10 +469,8 @@ def shared_memory_access(cfg: SimConfig, data: DataState, app,
     model's program order: `tlb.access_fused` resolves cross-wave fills /
     forwarding inside one call, and `dram_sched.access`'s in-batch ranking
     gives walk (golden-class) requests priority over the same cycle's data
-    requests. Either lane group may be empty (compat wrappers below).
+    requests. Either lane group may be empty (stage unit tests).
     """
-    des = cfg.design
-    dr = des.dram
     C = app.shape[0]
     nw = walk_lines.shape[0]
     nd = data_lines.shape[0]
@@ -469,22 +483,23 @@ def shared_memory_access(cfg: SimConfig, data: DataState, app,
     depth = jnp.concatenate([walk_tags, jnp.zeros((nd,), jnp.int32)])
 
     l2c, dram, bp_state = data.l2c, data.dram, data.bypass
-    if des.bypass.enabled:
-        # depth 0 (data) always fills, so one decision covers every lane
-        may_fill = bp_mod.should_fill(bp_state, depth)
-    else:
-        may_fill = jnp.ones((nw + nd,), bool)
+    # depth 0 (data) always fills, so one decision covers every lane;
+    # with bypass off every lane may fill
+    may_fill = jnp.where(dp.bypass_on,
+                         bp_mod.should_fill(bp_state, depth), True)
 
     # `Static` gives each app an equal slice of the sets/channels by
-    # restricting its index range; the spec is static, so the partition
-    # arithmetic traces out entirely for shared designs
-    if des.partition.kind == "static":
-        key = static_partition_index(lines, cfg.l2_sets, cfg.n_apps, apps)
-        channel = static_partition_index(lines, cfg.n_channels,
-                                         cfg.n_apps, apps)
-    else:
-        key = lines % cfg.l2_sets
-        channel = (lines % cfg.n_channels).astype(jnp.int32)
+    # restricting its index range; the selector is traced, so one program
+    # serves both partitionings (both index computations are a handful of
+    # integer lane ops)
+    key = jnp.where(
+        dp.static_part,
+        static_partition_index(lines, cfg.l2_sets, cfg.n_apps, apps),
+        lines % cfg.l2_sets)
+    channel = jnp.where(
+        dp.static_part,
+        static_partition_index(lines, cfg.n_channels, cfg.n_apps, apps),
+        lines % cfg.n_channels).astype(jnp.int32)
 
     # reuse TLB machinery: tag = full line id (unique, so the line cache
     # is tag-only and the ASID plane is skipped entirely)
@@ -498,7 +513,7 @@ def shared_memory_access(cfg: SimConfig, data: DataState, app,
     row = (lines // (cfg.n_channels * cfg.n_banks * 32)).astype(jnp.int32)
     dram, dram_lat = dram_sched.access(
         dram, channel, bank, row, apps, is_tlb, miss,
-        mask_enabled=dr.enabled, thres_max=dr.thres_max,
+        mask_enabled=dp.dram_on, thres_max=dp.thres_max,
         waves=max(L + K, 1))
     lat = lat + jnp.where(miss, cfg.lat_l2_cache + dram_lat, 0)
     bp_state = bp_mod.record(bp_state, depth, hit, go)
@@ -615,7 +630,7 @@ def translation_commit(cfg: SimConfig, trans: TransState, probe: TransProbe,
 
 
 # ---------------------------------------------------------------------------
-# compat wrappers: isolated translation / datapath stages (unit tests)
+# data-path result assembly
 # ---------------------------------------------------------------------------
 
 class DataOut(NamedTuple):
@@ -627,41 +642,12 @@ class DataOut(NamedTuple):
     l2d_hit: jax.Array           # bool: any of the lines hit the L2$
 
 
-def translation(cfg: SimConfig, trans: TransState, data: DataState,
-                tokens: tok_mod.TokenState, sched: SchedOut, t
-                ) -> Tuple[TransState, DataState, TransOut]:
-    """Full translation in isolation: probe + walk-only memory + commit.
-
-    `step` fuses the walk lanes with the data lanes into one shared
-    memory round instead; this wrapper exercises the same stages with an
-    empty data-lane group, which is convenient for unit tests."""
-    C = cfg.n_cores
-    trans, probe = translation_probe(cfg, trans, tokens, sched, t)
-    data, mem = shared_memory_access(
-        cfg, data, sched.app, probe.walk_lines, probe.walk_go,
-        probe.walk_tags, jnp.zeros((0,), jnp.int32), jnp.zeros((C,), bool),
-        t)
-    trans, tout = translation_commit(cfg, trans, probe, mem, sched, t)
-    return trans, data, tout
-
-
 def _data_out(cfg: SimConfig, front: DataFront, mem: MemOut) -> DataOut:
     """Assemble the data-path result from the shared-round split."""
     data_lat = jnp.where(front.l1d_hit, cfg.lat_l1_data,
                          cfg.lat_l1_data + mem.dlat)
     return DataOut(data_lat=data_lat, l1d_hit=front.l1d_hit,
                    go_l2d=front.go_l2d, dlat=mem.dlat, l2d_hit=mem.l2d_hit)
-
-
-def datapath(cfg: SimConfig, data: DataState, params_mat, sched: SchedOut, t
-             ) -> Tuple[DataState, DataOut]:
-    """Data path in isolation (empty walk-lane group; see `translation`)."""
-    front = datapath_front(cfg, params_mat, sched, t)
-    data, mem = shared_memory_access(
-        cfg, data, sched.app, jnp.zeros((0,), jnp.int32),
-        jnp.zeros((0,), bool), jnp.zeros((0,), jnp.int32), front.lines,
-        front.go_l2d, t)
-    return data, _data_out(cfg, front, mem)
 
 
 # ---------------------------------------------------------------------------
@@ -713,15 +699,17 @@ def retire(stall_until, instr, pos, sched: SchedOut, total_lat, gap, t):
     return stall_until, instr, pos
 
 
-def epoch_maintenance(cfg: SimConfig, trans: TransState,
+def epoch_maintenance(cfg: SimConfig, dp: DesignParams, trans: TransState,
                       tokens: tok_mod.TokenState, data: DataState, t
                       ) -> Tuple[tok_mod.TokenState, DataState]:
     """Every epoch_cycles: token hill-climb, DRAM pressure, bypass latch.
 
     `trans` must be the PRE-update translation state: the walk table is
     sampled before this cycle's installs, matching the paper's epoch-end
-    census of in-flight walks."""
-    des = cfg.design
+    census of in-flight walks. The epoch length is static (signature);
+    whether any adaptive mechanism is live is a traced `dp` predicate
+    (under a design-batched vmap the cond becomes a select, which is fine
+    — `do_epoch` is pure)."""
     na = cfg.n_apps
 
     def do_epoch(args):
@@ -734,14 +722,13 @@ def epoch_maintenance(cfg: SimConfig, trans: TransState,
             num_segments=na)
         dram = dram_sched.update_pressure(dram, census[:, 0], census[:, 1])
         return (tok_mod.epoch_update(tokens, warps_per_app,
-                                     step_frac=des.tokens.step_frac), dram,
+                                     step_frac=dp.step_frac), dram,
                 bp_mod.epoch_update(bp))
 
-    any_adaptive = (des.tokens.enabled or des.dram.enabled
-                    or des.bypass.enabled)
-    is_epoch = (t % des.epoch_cycles) == 0
+    any_adaptive = dp.tokens_on | dp.dram_on | dp.bypass_on
+    is_epoch = (t % cfg.design.epoch_cycles) == 0
     tokens, dram, bp_state = jax.lax.cond(
-        is_epoch & jnp.asarray(any_adaptive),
+        is_epoch & any_adaptive,
         do_epoch, lambda args: args, (tokens, data.dram, data.bypass))
     return tokens, data._replace(dram=dram, bypass=bp_state)
 
@@ -750,15 +737,17 @@ def epoch_maintenance(cfg: SimConfig, trans: TransState,
 # one-cycle transition: thin composition of the stages
 # ---------------------------------------------------------------------------
 
-def step(cfg: SimConfig, params_mat, state: SimState) -> SimState:
-    """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params."""
+def step(cfg: SimConfig, dp: DesignParams, params_mat,
+         state: SimState) -> SimState:
+    """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params;
+    dp: the design's traced knob plane (see `repro.core.design`)."""
     t = state.t + 1
     sched = warp_sched(cfg, params_mat, state.stall_until, state.pos, t)
-    trans_st, probe = translation_probe(cfg, state.trans, state.tokens,
+    trans_st, probe = translation_probe(cfg, dp, state.trans, state.tokens,
                                         sched, t)
     dfront = datapath_front(cfg, params_mat, sched, t)
     data_st, mem = shared_memory_access(
-        cfg, state.data, sched.app, probe.walk_lines, probe.walk_go,
+        cfg, dp, state.data, sched.app, probe.walk_lines, probe.walk_go,
         probe.walk_tags, dfront.lines, dfront.go_l2d, t)
     trans_st, tout = translation_commit(cfg, trans_st, probe, mem, sched, t)
     dout = _data_out(cfg, dfront, mem)
@@ -771,7 +760,8 @@ def step(cfg: SimConfig, params_mat, state: SimState) -> SimState:
     tokens = tok_mod.record(state.tokens, sched.app, tout.l2_hit_eff,
                             tout.l1_miss)
     stats = accumulate_stats(state.stats, cfg.n_apps, sched, tout, dout, t)
-    tokens, data_st = epoch_maintenance(cfg, state.trans, tokens, data_st, t)
+    tokens, data_st = epoch_maintenance(cfg, dp, state.trans, tokens,
+                                        data_st, t)
 
     return SimState(t=t, stall_until=stall_until, instr=instr, pos=pos,
                     trans=trans_st, data=data_st, tokens=tokens, stats=stats)

@@ -13,24 +13,30 @@ Two API levels share one compiled core:
 * Typed: `Experiment(design, mixes, cycles).run()` returns an
   `ExperimentResult` of `MixResult`/`AppStats` objects with the derived
   metrics (weighted speedup, unfairness, per-app hit rates) as
-  methods/properties; `sweep(designs, mixes)` drives many designs,
-  batching one compile per (design, n_apps).
+  methods/properties; `sweep(designs, mixes)` drives many designs.
 
-Compiled executables are lru-cached on the full `SimConfig` — the
-embedded `Design` hashes over every policy-spec field, so two designs
-that differ in any spec never collide, even under the same name.
+Compilation is keyed on the design's STATIC SIGNATURE, not the design:
+a design's dynamic knobs travel as a traced `DesignParams` plane (see
+`repro.core.design`), so every design in a signature group shares one
+executable, and `run_grid` / `sweep` stack (DesignParams, workload)
+rows along a vmapped grid axis — one compile and ONE device execution
+per (signature, n_apps) for a whole design x mix grid. The grid path
+is bit-for-bit identical to running the designs one by one (pinned by
+tests against the float-hex goldens).
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict, List, Mapping, Optional, Sequence, Tuple, Union
+from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, \
+    Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.design import Design, as_design
+from repro.core.design import (Design, as_design, canonical_design,
+                               design_params, static_signature)
 from repro.sim.config import SimConfig
 from repro.sim.memsys import SimState, init_state, step
 from repro.sim.workloads import app_matrix
@@ -39,26 +45,71 @@ jax.config.update("jax_enable_x64", False)
 
 DesignLike = Union[str, Design]  # legacy DesignPoint also accepted
 
+# incremented every time a simulator program is traced for compilation
+# (once per jit/vmap wrapper; re-executions hit the cache and do not
+# bump it) — tests assert "one trace per signature group" against this
+TRACE_COUNT = 0
 
-@functools.lru_cache(maxsize=64)
-def _compiled_run(cfg: SimConfig):
-    def run(params_mat):
-        st = init_state(cfg)
+
+def _canonical(cfg: SimConfig) -> SimConfig:
+    """Replace the embedded design by its signature group's canonical
+    representative: the compile-cache key for everything below."""
+    return dataclasses.replace(
+        cfg, design=canonical_design(static_signature(cfg.design)))
+
+
+def _run_fn(cfg: SimConfig):
+    """The raw (DesignParams, params_mat) -> final-state scan.
+
+    `cfg` must be canonical — the stages read only static-signature
+    fields from it; every dynamic knob comes from the traced `dp`."""
+    def run(dp, params_mat):
+        global TRACE_COUNT
+        TRACE_COUNT += 1              # runs at trace time only
+        st = init_state(cfg, dp)
 
         def body(s, _):
-            return step(cfg, params_mat, s), None
+            return step(cfg, dp, params_mat, s), None
 
         final, _ = jax.lax.scan(body, st, None, length=cfg.sim_cycles)
         return final
 
-    return jax.jit(run)
+    return run
 
 
 @functools.lru_cache(maxsize=64)
+def _compiled_sig_run(ccfg: SimConfig):
+    """One compiled (dp, pm) executable per (signature, SimConfig)."""
+    return jax.jit(_run_fn(ccfg))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_sig_batch_run(ccfg: SimConfig):
+    """One design, many mixes: vmap over the workload axis only."""
+    return jax.jit(jax.vmap(_run_fn(ccfg), in_axes=(None, 0)))
+
+
+@functools.lru_cache(maxsize=64)
+def _compiled_grid_run(ccfg: SimConfig):
+    """Design x mix grid: vmap over stacked (DesignParams, params_mat)
+    rows — one execution services every design of a signature group."""
+    return jax.jit(jax.vmap(_run_fn(ccfg), in_axes=(0, 0)))
+
+
+@functools.lru_cache(maxsize=128)
+def _compiled_run(cfg: SimConfig):
+    """Back-compat pm-only callable for one design; shares the signature
+    group's executable (distinct designs, one compile)."""
+    return functools.partial(_compiled_sig_run(_canonical(cfg)),
+                             design_params(cfg.design))
+
+
+@functools.lru_cache(maxsize=128)
 def _compiled_batch_run(cfg: SimConfig):
     """vmapped over a leading batch of workload parameter matrices — one
-    compile serves every mix/solo under a design."""
-    return jax.jit(jax.vmap(_compiled_run(cfg)))
+    executable serves every mix/solo under the design's signature."""
+    return functools.partial(_compiled_sig_batch_run(_canonical(cfg)),
+                             design_params(cfg.design))
 
 
 def _stats(cfg: SimConfig, st: SimState) -> Dict[str, np.ndarray]:
@@ -136,6 +187,69 @@ def run_batch(design: DesignLike,
     for i in range(len(bench_mixes)):
         sub = jax.tree_util.tree_map(lambda x: x[i], final)
         out.append(_stats(cfg, sub))
+    return out
+
+
+def run_grid(designs: Sequence[DesignLike],
+             bench_mixes: Sequence[Tuple[Optional[str], ...]],
+             cycles: int = 60_000,
+             max_rows: int = 64) -> List[List[Dict]]:
+    """Run the full designs x mixes cross product, one compile per
+    static-signature group and as few device executions as `max_rows`
+    allows.
+
+    Designs are grouped by `static_signature`; each group's
+    `DesignParams` are stacked design-major against a tiled copy of the
+    mix matrices and vmapped through the group's shared executable.
+    Groups whose full grid exceeds `max_rows` simulation rows are
+    executed in whole-design chunks of EQUAL width — the largest
+    divisor of the group size within the cap — so every chunk reuses
+    the group's one compiled program (per-row results are independent
+    under vmap, so chunking cannot change them). This bounds peak state
+    memory; per-sim throughput is flat in the batch width anyway, so
+    narrower chunks cost nothing but per-call dispatch.
+    Returns `stats[d][m]` aligned with the inputs — bit-for-bit equal to
+    `run_mix(designs[d], bench_mixes[m], cycles)`.
+    """
+    ds = [as_design(d) for d in designs]
+    sizes = {len(m) for m in bench_mixes}
+    if len(sizes) != 1:
+        raise ValueError(f"all mixes must have the same size, got {sizes}")
+    if not ds:
+        return []
+    n = sizes.pop()
+    M = len(bench_mixes)
+    pms = np.stack([_mix_matrix(m) for m in bench_mixes])
+    designs_per_call = max(max_rows // M, 1)
+
+    out: List[List[Optional[Dict]]] = [[None] * M for _ in ds]
+    groups: Dict[object, List[int]] = {}
+    for i, d in enumerate(ds):
+        groups.setdefault(static_signature(d), []).append(i)
+    for sig, g_idxs in groups.items():
+        ccfg = SimConfig(n_apps=n, sim_cycles=cycles,
+                         design=canonical_design(sig))
+        G = len(g_idxs)
+        # equal-width chunks only: a ragged tail would be a second
+        # compiled program for the group
+        width = G if G <= designs_per_call else max(
+            w for w in range(1, designs_per_call + 1) if G % w == 0)
+        for lo in range(0, G, width):
+            idxs = g_idxs[lo:lo + width]
+            dps = [design_params(ds[i]) for i in idxs]
+            # rows are design-major: row g*M + m = (design idxs[g], mix m)
+            dp_stack = jax.tree_util.tree_map(
+                lambda *leaves: jnp.repeat(jnp.stack(leaves), M, axis=0),
+                *dps)
+            pm_stack = jnp.asarray(np.tile(pms, (len(idxs), 1, 1)))
+            # one bulk device->host transfer of the chunk's final state
+            final = jax.device_get(
+                _compiled_grid_run(ccfg)(dp_stack, pm_stack))
+            for g, di in enumerate(idxs):
+                for m in range(M):
+                    sub = jax.tree_util.tree_map(
+                        lambda x, r=g * M + m: x[r], final)
+                    out[di][m] = _stats(ccfg, sub)
     return out
 
 
@@ -273,6 +387,93 @@ class ExperimentResult:
         return float(np.mean([r.unfairness() for r in self.results]))
 
 
+def _normalize_mixes(mixes) -> Tuple[Tuple[Optional[str], ...], ...]:
+    """Normalize a mix list: bare bench strings become 1-app mixes."""
+    if isinstance(mixes, str):
+        raise TypeError(
+            f"mixes must be a sequence of mixes, got the bare string "
+            f"{mixes!r} — did you mean [({mixes!r},)]?")
+    norm = tuple((m,) if isinstance(m, str) else tuple(m) for m in mixes)
+    if not norm:
+        raise ValueError("need at least one mix")
+    return norm
+
+
+class _NPlan(NamedTuple):
+    """Per-n_apps slice of an experiment: which simulation rows to run
+    (user mixes + IPC_alone solo mixes) and how to map them back."""
+    items: Tuple[Tuple[int, Tuple[Optional[str], ...]], ...]  # (orig idx, mix)
+    rows: Tuple[Tuple[Optional[str], ...], ...]   # mixes + solo_mixes
+    n_mixes: int
+    solo_shaped: frozenset                        # user mixes that ARE solos
+    solo_mixes: Tuple[Tuple[Optional[str], ...], ...]
+
+
+def _mix_plan(mixes, solo_baselines: bool) -> Dict[int, _NPlan]:
+    """Group normalized mixes by n_apps and plan each group's simulation
+    rows, deduplicating solo baselines against solo-shaped user mixes."""
+    by_n: Dict[int, List[Tuple[int, Tuple[Optional[str], ...]]]] = {}
+    for i, m in enumerate(mixes):
+        by_n.setdefault(len(m), []).append((i, m))
+    plans: Dict[int, _NPlan] = {}
+    for n, items in sorted(by_n.items()):
+        ms = [m for _, m in items]
+        benches = sorted({b for m in ms for b in m
+                          if b is not None}) if solo_baselines else []
+        # a user mix that IS the canonical solo shape (bench + idle
+        # partners) doubles as its own baseline — don't simulate twice
+        solo_shaped = {m for m in ms if m[0] is not None and not any(m[1:])}
+        solo_mixes = [(b,) + (None,) * (n - 1) for b in benches]
+        solo_mixes = [sm for sm in solo_mixes if sm not in solo_shaped]
+        plans[n] = _NPlan(items=tuple(items),
+                          rows=tuple(ms) + tuple(solo_mixes),
+                          n_mixes=len(ms),
+                          solo_shaped=frozenset(solo_shaped),
+                          solo_mixes=tuple(solo_mixes))
+    return plans
+
+
+def _mk_mix_result(design: Design, cycles: int, benches, s, solo_ipc,
+                   n: int) -> MixResult:
+    apps = tuple(
+        AppStats(
+            bench=b, index=i,
+            ipc=float(s["ipc"][i]),
+            ipc_alone=solo_ipc.get((b, n)),
+            l1_tlb_hit_rate=float(s["l1_hit_rate"][i]),
+            l2_tlb_hit_rate=float(s["l2_hit_rate"][i]),
+            bypass_hit_rate=float(s["byp_hit_rate"][i]),
+            walk_lat=float(s["walk_lat"][i]),
+            walks=float(s["walks"][i]),
+            stalls_per_miss=float(s["stalls_per_miss"][i]),
+            dram_tlb_lat=float(s["dram_tlb_lat"][i]),
+            dram_data_lat=float(s["dram_data_lat"][i]),
+            tokens=int(s["tokens"][i]),
+        ) for i, b in enumerate(benches))
+    return MixResult(design=design, benches=tuple(benches),
+                     cycles=cycles, apps=apps, raw=s)
+
+
+def _assemble_result(design: Design, cycles: int, n_results: int,
+                     plans: Dict[int, _NPlan],
+                     stats_by_n: Dict[int, List[Dict]]) -> ExperimentResult:
+    """Fold per-row stats back into an ExperimentResult (shared by the
+    per-design `Experiment.run` and the grid-path `sweep`)."""
+    results: List[Optional[MixResult]] = [None] * n_results
+    solo_ipc: Dict[Tuple[str, int], float] = {}
+    for n, plan in sorted(plans.items()):
+        stats = stats_by_n[n]
+        for m, s in zip(plan.rows[:plan.n_mixes], stats):
+            if m in plan.solo_shaped:
+                solo_ipc[(m[0], n)] = float(s["ipc"][0])
+        for sm, s in zip(plan.solo_mixes, stats[plan.n_mixes:]):
+            solo_ipc[(sm[0], n)] = float(s["ipc"][0])
+        for (i, m), s in zip(plan.items, stats[:plan.n_mixes]):
+            results[i] = _mk_mix_result(design, cycles, m, s, solo_ipc, n)
+    return ExperimentResult(design=design, cycles=cycles,
+                            results=tuple(results), solo_ipc=solo_ipc)
+
+
 @dataclasses.dataclass(frozen=True)
 class Experiment:
     """Typed façade over `run_batch`: a design × a list of mixes.
@@ -295,76 +496,44 @@ class Experiment:
 
     def __post_init__(self):
         object.__setattr__(self, "design", as_design(self.design))
-        if isinstance(self.mixes, str):
-            raise TypeError(
-                f"mixes must be a sequence of mixes, got the bare string "
-                f"{self.mixes!r} — did you mean [({self.mixes!r},)]?")
-        norm = tuple((m,) if isinstance(m, str) else tuple(m)
-                     for m in self.mixes)
-        if not norm:
-            raise ValueError("Experiment needs at least one mix")
-        object.__setattr__(self, "mixes", norm)
+        object.__setattr__(self, "mixes", _normalize_mixes(self.mixes))
 
     def run(self, solo_baselines: bool = True) -> ExperimentResult:
-        by_n: Dict[int, List[Tuple[int, Tuple[Optional[str], ...]]]] = {}
-        for i, m in enumerate(self.mixes):
-            by_n.setdefault(len(m), []).append((i, m))
-
-        results: List[Optional[MixResult]] = [None] * len(self.mixes)
-        solo_ipc: Dict[Tuple[str, int], float] = {}
-        for n, items in sorted(by_n.items()):
-            mixes = [m for _, m in items]
-            benches = sorted({b for m in mixes for b in m
-                              if b is not None}) if solo_baselines else []
-            # a user mix that IS the canonical solo shape (bench + idle
-            # partners) doubles as its own baseline — don't simulate twice
-            solo_shaped = {m for m in mixes
-                           if m[0] is not None and not any(m[1:])}
-            solo_mixes = [(b,) + (None,) * (n - 1) for b in benches]
-            solo_mixes = [sm for sm in solo_mixes if sm not in solo_shaped]
-            # one compile per (design, n_apps): mixes + solos in one batch
-            stats = run_batch(self.design, mixes + solo_mixes,
-                              cycles=self.cycles)
-            for m, s in zip(mixes, stats):
-                if m in solo_shaped:
-                    solo_ipc[(m[0], n)] = float(s["ipc"][0])
-            for sm, s in zip(solo_mixes, stats[len(mixes):]):
-                solo_ipc[(sm[0], n)] = float(s["ipc"][0])
-            for (i, m), s in zip(items, stats[:len(mixes)]):
-                results[i] = self._mix_result(m, s, solo_ipc, n)
-        return ExperimentResult(design=self.design, cycles=self.cycles,
-                                results=tuple(results), solo_ipc=solo_ipc)
-
-    def _mix_result(self, benches, s, solo_ipc, n) -> MixResult:
-        apps = tuple(
-            AppStats(
-                bench=b, index=i,
-                ipc=float(s["ipc"][i]),
-                ipc_alone=solo_ipc.get((b, n)),
-                l1_tlb_hit_rate=float(s["l1_hit_rate"][i]),
-                l2_tlb_hit_rate=float(s["l2_hit_rate"][i]),
-                bypass_hit_rate=float(s["byp_hit_rate"][i]),
-                walk_lat=float(s["walk_lat"][i]),
-                walks=float(s["walks"][i]),
-                stalls_per_miss=float(s["stalls_per_miss"][i]),
-                dram_tlb_lat=float(s["dram_tlb_lat"][i]),
-                dram_data_lat=float(s["dram_data_lat"][i]),
-                tokens=int(s["tokens"][i]),
-            ) for i, b in enumerate(benches))
-        return MixResult(design=self.design, benches=tuple(benches),
-                         cycles=self.cycles, apps=apps, raw=s)
+        plans = _mix_plan(self.mixes, solo_baselines)
+        # one executable per (signature, n_apps): mixes + solos per batch
+        stats_by_n = {n: run_batch(self.design, plan.rows, self.cycles)
+                      for n, plan in plans.items()}
+        return _assemble_result(self.design, self.cycles, len(self.mixes),
+                                plans, stats_by_n)
 
 
 def sweep(designs: Sequence[DesignLike],
           mixes: Sequence, cycles: int = 60_000,
-          solo_baselines: bool = True) -> Dict[str, ExperimentResult]:
-    """Run several designs over the same mixes: one `Experiment` per
-    design (so one compile per (design, n_apps)), keyed by design name."""
-    out: Dict[str, ExperimentResult] = {}
+          solo_baselines: bool = True,
+          grid: bool = True) -> Dict[str, ExperimentResult]:
+    """Run several designs over the same mixes, keyed by design name.
+
+    With `grid=True` (default) the designs are grouped by static
+    signature and each (signature, n_apps) slice — every design of the
+    group x every mix of that size, solo baselines included — runs as
+    ONE compiled, vmapped grid execution (`run_grid`). The paper's
+    8-design ablation grid compiles two programs instead of eight and
+    executes two device calls per n_apps. `grid=False` keeps the
+    per-design `Experiment` loop; results are bit-for-bit identical
+    either way (pinned by tests)."""
+    ds: List[Design] = []
     for d in designs:
         dd = as_design(d)
-        if dd.name in out:
+        if any(x.name == dd.name for x in ds):
             raise ValueError(f"duplicate design name in sweep: {dd.name!r}")
-        out[dd.name] = Experiment(dd, tuple(mixes), cycles).run(
-            solo_baselines=solo_baselines)
-    return out
+        ds.append(dd)
+    if not grid:
+        return {d.name: Experiment(d, tuple(mixes), cycles).run(
+            solo_baselines=solo_baselines) for d in ds}
+    norm = _normalize_mixes(mixes)
+    plans = _mix_plan(norm, solo_baselines)
+    stats = {n: run_grid(ds, plan.rows, cycles)
+             for n, plan in plans.items()}        # stats[n][design][row]
+    return {d.name: _assemble_result(
+        d, cycles, len(norm), plans, {n: stats[n][i] for n in plans})
+        for i, d in enumerate(ds)}

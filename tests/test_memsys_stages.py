@@ -1,10 +1,12 @@
 """Unit tests for the layered memsys pipeline + N-app runner entry points.
 
-Each pipeline stage (warp_sched / translation / datapath / accumulate_stats)
-is exercised in isolation; the vmapped L1 TLB bank is checked for exact
-equivalence against the previous hand-rolled per-core implementation; and
-the N-app runner invariants (run_mix == run_pair bit-for-bit, idle-partner
-run_mix == run_solo) are pinned down.
+Each pipeline stage (warp_sched / translation probe+commit / datapath /
+accumulate_stats) is exercised in isolation (the `_translation` /
+`_datapath` helpers compose the split stages with an empty partner lane
+group); the vmapped L1 TLB bank is checked for exact equivalence against
+the previous hand-rolled per-core implementation; and the N-app runner
+invariants (run_mix == run_pair bit-for-bit, idle-partner run_mix ==
+run_solo) are pinned down.
 """
 import jax.numpy as jnp
 import numpy as np
@@ -12,6 +14,7 @@ import pytest
 
 from repro.core import tlb as tlb_mod
 from repro.core import tokens as tok_mod
+from repro.core.design import design_params
 from repro.core.mask import design, static_partition_index
 from repro.sim import memsys
 from repro.sim.config import SimConfig
@@ -57,6 +60,31 @@ def test_warp_sched_picks_oldest_ready():
 
 # ----------------------------------------------------------- translation
 
+def _translation(cfg, trans, data, tokens, sched, t):
+    """Translation in isolation: probe + walk-only shared memory round
+    (empty data-lane group) + commit — the split stages `step` composes."""
+    dp = design_params(cfg.design)
+    C = cfg.n_cores
+    trans, probe = memsys.translation_probe(cfg, dp, trans, tokens, sched, t)
+    data, mem = memsys.shared_memory_access(
+        cfg, dp, data, sched.app, probe.walk_lines, probe.walk_go,
+        probe.walk_tags, jnp.zeros((0,), jnp.int32), jnp.zeros((C,), bool),
+        t)
+    trans, tout = memsys.translation_commit(cfg, trans, probe, mem, sched, t)
+    return trans, data, tout
+
+
+def _datapath(cfg, data, params_mat, sched, t):
+    """Data path in isolation (empty walk-lane group; see `_translation`)."""
+    dp = design_params(cfg.design)
+    front = memsys.datapath_front(cfg, params_mat, sched, t)
+    data, mem = memsys.shared_memory_access(
+        cfg, dp, data, sched.app, jnp.zeros((0,), jnp.int32),
+        jnp.zeros((0,), bool), jnp.zeros((0,), jnp.int32), front.lines,
+        front.go_l2d, t)
+    return data, memsys._data_out(cfg, front, mem)
+
+
 def test_translation_stage_cold_then_hot():
     """A translation-only cycle: cold request walks, refetch hits the L1."""
     cfg = SMALL
@@ -64,14 +92,14 @@ def test_translation_stage_cold_then_hot():
     tokens = tok_mod.init(cfg.n_apps,
                           jnp.asarray(cfg.warps_per_app, jnp.int32), 0.25)
     sched = _sched(cfg, [7, 7, 9, 9])
-    trans, data, out = memsys.translation(cfg, trans, data, tokens, sched,
-                                          jnp.int32(1))
+    trans, data, out = _translation(cfg, trans, data, tokens, sched,
+                                    jnp.int32(1))
     assert not bool(out.l1_hit.any())
     assert bool(out.need_walk.all())
     assert np.all(np.asarray(out.trans_lat) > cfg.lat_l2_tlb)
     # the miss filled the per-core L1 bank: same request now hits locally
-    _, _, out2 = memsys.translation(cfg, trans, data, tokens, sched,
-                                    jnp.int32(2))
+    _, _, out2 = _translation(cfg, trans, data, tokens, sched,
+                              jnp.int32(2))
     assert bool(out2.l1_hit.all())
     assert not bool(out2.need_walk.any())
     assert np.all(np.asarray(out2.trans_lat) == cfg.lat_l1_tlb)
@@ -86,8 +114,8 @@ def test_translation_asid_isolation_in_l1_bank():
     # cores 0/1 (app 0) request VPN 5; cores 2/3 (app 1) request VPN 6
     # (distinct sets: the shared L2 TLB takes one fill per set per cycle)
     sched = _sched(cfg, [5, 5, 6, 6])
-    trans, data, _ = memsys.translation(cfg, trans, data, tokens, sched,
-                                        jnp.int32(1))
+    trans, data, _ = _translation(cfg, trans, data, tokens, sched,
+                                  jnp.int32(1))
     occ = tlb_mod.occupancy_by_asid(trans.l2tlb, cfg.n_apps)
     assert occ.tolist() == [1, 1]
     # (5, asid 0) is resident, (5, asid 1) must NOT hit across ASIDs
@@ -104,8 +132,8 @@ def test_datapath_stage_miss_latency():
     pm = app_matrix(["3DS", "BLK"])
     pm[:, FIELD["l1d_hit_milli"]] = 0             # force L1D misses
     data = memsys.init_data(cfg)
-    data, out = memsys.datapath(cfg, data, jnp.asarray(pm),
-                                _sched(cfg, [7, 8, 9, 10]), jnp.int32(1))
+    data, out = _datapath(cfg, data, jnp.asarray(pm),
+                          _sched(cfg, [7, 8, 9, 10]), jnp.int32(1))
     assert not bool(np.asarray(out.l1d_hit).any())
     assert int(np.asarray(out.go_l2d).sum()) == cfg.n_cores
     assert np.all(np.asarray(out.data_lat)
@@ -117,8 +145,8 @@ def test_datapath_stage_hit_latency():
     pm = app_matrix(["3DS", "BLK"])
     pm[:, FIELD["l1d_hit_milli"]] = 1024          # force L1D hits
     data = memsys.init_data(cfg)
-    _, out = memsys.datapath(cfg, data, jnp.asarray(pm),
-                             _sched(cfg, [7, 8, 9, 10]), jnp.int32(1))
+    _, out = _datapath(cfg, data, jnp.asarray(pm),
+                       _sched(cfg, [7, 8, 9, 10]), jnp.int32(1))
     assert bool(np.asarray(out.l1d_hit).all())
     assert not bool(np.asarray(out.go_l2d).any())
     assert np.all(np.asarray(out.data_lat) == cfg.lat_l1_data)
