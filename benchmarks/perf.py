@@ -15,6 +15,20 @@ Measures steps/sec of the compiled one-cycle pipeline in four shapes:
             sweep's dominant cost at this scale is its XLA compiles (8
             programs pre-vectorization vs one per signature group)
 
+With `--devices N` (N > 1) a fifth scenario rides along:
+
+  grid_sharded — the grid sweep with its stacked rows sharded over N
+            devices (runner `_row_sharding`/`_pad_rows`); if fewer
+            devices are visible the benchmark re-executes itself with
+            `--xla_force_host_platform_device_count=N`. Under
+            `--compare` it is timed cold like `grid`, new-side sharded
+            vs old-side single-device, at a disjoint cycle count so
+            neither side reuses the `grid` round's compiles.
+
+`--tlb-backend {xla,pallas,pallas-interpret}` selects the fused
+shared-round backend for the current tree (SimConfig.tlb_backend; all
+backends are bit-for-bit identical, see tests/test_tlb_backends.py).
+
 The scenarios are interleaved round-robin inside ONE process and
 the median per-scenario rate is reported: this box's absolute throughput
 drifts with neighbor load, so sequential before/after blocks are not
@@ -40,8 +54,10 @@ Run:  PYTHONPATH=src python -m benchmarks.perf [--cycles N] [--rounds R]
 from __future__ import annotations
 
 import argparse
+import dataclasses
 import importlib
 import json
+import os
 import platform
 import re
 import shutil
@@ -83,6 +99,14 @@ def enable_compilation_cache(cache_dir: Path = CACHE_DIR) -> None:
     jax.config.update("jax_persistent_cache_min_compile_time_secs", 0)
 
 
+def _mk_cfg(config_mod, **kw):
+    """SimConfig for `config_mod`, dropping kwargs the tree predates
+    (e.g. `tlb_backend` does not exist on pre-PR-6 baseline copies)."""
+    fields = {f.name for f in dataclasses.fields(config_mod.SimConfig)}
+    return config_mod.SimConfig(**{k: v for k, v in kw.items()
+                                   if k in fields})
+
+
 def _signature_groups(pkg: str = "repro"):
     """Count of static-signature groups over the paper's 8 designs, or
     None for trees that predate the static/traced design split."""
@@ -95,13 +119,18 @@ def _signature_groups(pkg: str = "repro"):
 
 
 def _scenarios(design: str, cycles: int, pkg: str = "repro",
-               include_grid: bool = True):
+               include_grid: bool = True, tlb_backend: str = "xla",
+               devices: int = 0):
     """name -> (zero-arg compiled call, sim-steps per call).
 
     `pkg` selects the simulator package ("repro" or a baseline copy such
     as "repro_base") so two versions can be timed in one process.
-    `include_grid=False` skips building the grid scenario (the compare
+    `include_grid=False` skips building the grid scenarios (the compare
     harness times grid sweeps cold via `_grid_sweep` instead).
+    `tlb_backend` selects the fused-round backend on trees that have the
+    knob (silently dropped on older baseline copies, which ARE the xla
+    path). `devices > 1` adds a `grid_sharded` scenario: the same sweep
+    with its rows sharded over that many devices.
     """
     import jax.numpy as jnp
     config_mod = importlib.import_module(pkg + ".sim.config")
@@ -111,15 +140,15 @@ def _scenarios(design: str, cycles: int, pkg: str = "repro",
     d = design_mod.get_design(design)
 
     def single(benches):
-        cfg = config_mod.SimConfig(n_apps=len(benches), sim_cycles=cycles,
-                                   design=d)
+        cfg = _mk_cfg(config_mod, n_apps=len(benches), sim_cycles=cycles,
+                      design=d, tlb_backend=tlb_backend)
         pm = jnp.asarray(runner_mod._mix_matrix(benches))
         fn = runner_mod._compiled_run(cfg)
         return (lambda: jax.block_until_ready(fn(pm))), cycles
 
     def batch(mixes):
-        cfg = config_mod.SimConfig(n_apps=len(mixes[0]), sim_cycles=cycles,
-                                   design=d)
+        cfg = _mk_cfg(config_mod, n_apps=len(mixes[0]), sim_cycles=cycles,
+                      design=d, tlb_backend=tlb_backend)
         pm = jnp.asarray(np.stack([runner_mod._mix_matrix(m)
                                    for m in mixes]))
         fn = runner_mod._compiled_batch_run(cfg)
@@ -132,11 +161,16 @@ def _scenarios(design: str, cycles: int, pkg: str = "repro",
         "batch8": batch(workloads_mod.pair_workloads()[:8]),
     }
     if include_grid:
-        scen["grid"] = _grid_sweep(pkg, min(cycles, GRID_CYCLES))
+        scen["grid"] = _grid_sweep(pkg, min(cycles, GRID_CYCLES),
+                                   tlb_backend)
+        if devices and devices > 1:
+            scen["grid_sharded"] = _grid_sweep(pkg, min(cycles, GRID_CYCLES),
+                                               tlb_backend, devices)
     return scen
 
 
-def _grid_sweep(pkg: str, cycles: int):
+def _grid_sweep(pkg: str, cycles: int, tlb_backend: str = "xla",
+                devices: int = 0):
     """The paper's 8-design ablation sweep over GRID_N_MIXES pairs:
     (zero-arg call, sim-steps). The call compiles lazily on first use,
     so timing a FRESH `cycles` value measures the sweep end-to-end
@@ -145,13 +179,17 @@ def _grid_sweep(pkg: str, cycles: int):
     On grid-capable trees: one vmapped execution per signature group.
     On older trees: the per-design loop (one vmapped mix batch per
     design) — the honest pre-vectorization sweep shape. Both run the
-    identical designs x mixes work."""
+    identical designs x mixes work. `devices > 1` shards each group's
+    rows over that many devices (runner `_row_sharding`/`_pad_rows`;
+    requires a sharding-capable tree)."""
     import jax.numpy as jnp
     config_mod = importlib.import_module(pkg + ".sim.config")
     runner_mod = importlib.import_module(pkg + ".sim.runner")
     workloads_mod = importlib.import_module(pkg + ".sim.workloads")
     design_mod = importlib.import_module(pkg + ".core.design")
     mask_mod = importlib.import_module(pkg + ".core.mask")
+    if devices and devices > 1 and not hasattr(runner_mod, "_row_sharding"):
+        raise ValueError(f"{pkg} tree has no sharded grid support")
 
     names = list(mask_mod.ALL_DESIGNS)
     mixes = workloads_mod.pair_workloads()[:GRID_N_MIXES]
@@ -165,20 +203,27 @@ def _grid_sweep(pkg: str, cycles: int):
             groups.setdefault(design_mod.static_signature(dd),
                               []).append(dd)
         for sig, gds in groups.items():
-            ccfg = config_mod.SimConfig(
-                n_apps=2, sim_cycles=cycles,
-                design=design_mod.canonical_design(sig))
+            ccfg = _mk_cfg(config_mod, n_apps=2, sim_cycles=cycles,
+                           design=design_mod.canonical_design(sig),
+                           tlb_backend=tlb_backend)
             dp_stack = jax.tree_util.tree_map(
                 lambda *leaves: jnp.repeat(jnp.stack(leaves),
                                            len(mixes), axis=0),
                 *[design_mod.design_params(dd) for dd in gds])
             pm_stack = jnp.asarray(np.tile(pms, (len(gds), 1, 1)))
+            if devices and devices > 1:
+                sharding = runner_mod._row_sharding(devices)
+                (dp_stack, pm_stack), _ = runner_mod._pad_rows(
+                    (dp_stack, pm_stack), devices)
+                dp_stack, pm_stack = jax.device_put(
+                    (dp_stack, pm_stack), sharding)
             fn = runner_mod._compiled_grid_run(ccfg)
             calls.append((fn, (dp_stack, pm_stack)))
     else:
         for n in names:
-            cfg = config_mod.SimConfig(n_apps=2, sim_cycles=cycles,
-                                       design=design_mod.get_design(n))
+            cfg = _mk_cfg(config_mod, n_apps=2, sim_cycles=cycles,
+                          design=design_mod.get_design(n),
+                          tlb_backend=tlb_backend)
             calls.append((runner_mod._compiled_batch_run(cfg),
                           (jnp.asarray(pms),)))
     return (lambda: [jax.block_until_ready(fn(*args))
@@ -226,7 +271,8 @@ def _materialize_baseline(ref: str) -> str:
 
 def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
                 rounds: int = 5, out_path: Path = OUT_PATH,
-                keep_baseline: bool = False) -> dict:
+                keep_baseline: bool = False, tlb_backend: str = "xla",
+                devices: int = 0) -> dict:
     """Interleaved A/B: current tree vs the committed tree at `ref`.
 
     Each round times (new, old) back-to-back per scenario; the headline
@@ -238,16 +284,21 @@ def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
     compile + execute, at a fresh cycle count every round so neither
     side can reuse a compiled program — because the sweep's real cost
     includes its XLA compiles (8 programs pre-vectorization, one per
-    signature group after). The persistent compilation cache is
-    disabled for the whole compare run for the same reason. The
-    materialized baseline tree under `.bench_compare/` is removed on
-    exit unless `keep_baseline`."""
+    signature group after). With `devices > 1` a `grid_sharded` round
+    rides along: the NEW side shards the sweep's rows over the devices,
+    the OLD side runs its plain single-device sweep, both cold at a
+    cycle count distinct from the `grid` round's (so neither side can
+    reuse those compiles). The persistent compilation cache is disabled
+    for the whole compare run for the same reason. The materialized
+    baseline tree under `.bench_compare/` is removed on exit unless
+    `keep_baseline`."""
     try:
         sha = _materialize_baseline(ref)
         jax.config.update("jax_compilation_cache_dir", None)
         print("# persistent compilation cache disabled for --compare "
               "(grid rounds time cold compiles)", flush=True)
-        scen_new = _scenarios(design, cycles, "repro", include_grid=False)
+        scen_new = _scenarios(design, cycles, "repro", include_grid=False,
+                              tlb_backend=tlb_backend)
         scen_old = _scenarios(design, cycles, "repro_base",
                               include_grid=False)
         warm_names = list(scen_new)
@@ -259,6 +310,8 @@ def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
                       f"{time.perf_counter() - t0:.1f}s", flush=True)
 
         names = warm_names + ["grid"]
+        if devices and devices > 1:
+            names.append("grid_sharded")
         ratios = {name: [] for name in names}
         rates = {name: {"new": [], "old": []} for name in names}
         for r in range(rounds):
@@ -276,7 +329,7 @@ def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
                 rates[name]["old"].append(steps / t_old)
             # grid: cold end-to-end sweep, fresh cycles -> fresh compiles
             gc = min(cycles, GRID_CYCLES) + r + 1
-            call_new, gsteps = _grid_sweep("repro", gc)
+            call_new, gsteps = _grid_sweep("repro", gc, tlb_backend)
             call_old, _ = _grid_sweep("repro_base", gc)
             t0 = time.perf_counter()
             call_new()
@@ -290,9 +343,31 @@ def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
             print(f"# compare round {r + 1}/{rounds} done "
                   f"(grid cold: new {t_new:.1f}s old {t_old:.1f}s)",
                   flush=True)
+            if devices and devices > 1:
+                # sharded pair at a cycle count disjoint from the grid
+                # round's range, so neither side reuses those compiles:
+                # new = rows sharded over `devices`, old = the baseline
+                # tree's single-device vmapped sweep
+                gs = min(cycles, GRID_CYCLES) + 1_000 + r
+                call_new, ssteps = _grid_sweep("repro", gs, tlb_backend,
+                                               devices)
+                call_old, _ = _grid_sweep("repro_base", gs)
+                t0 = time.perf_counter()
+                call_new()
+                t_new = time.perf_counter() - t0
+                t0 = time.perf_counter()
+                call_old()
+                t_old = time.perf_counter() - t0
+                ratios["grid_sharded"].append(t_old / t_new)
+                rates["grid_sharded"]["new"].append(ssteps / t_new)
+                rates["grid_sharded"]["old"].append(ssteps / t_old)
+                print(f"# compare round {r + 1}/{rounds} sharded "
+                      f"(cold: new {t_new:.1f}s old {t_old:.1f}s)",
+                      flush=True)
 
         result = _measure_report(design, cycles, rounds,
-                                 {n: rates[n]["new"] for n in rates})
+                                 {n: rates[n]["new"] for n in rates},
+                                 tlb_backend=tlb_backend, devices=devices)
         result["compare"] = {
             "ref": ref,
             "sha": sha,
@@ -320,7 +395,8 @@ def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
                   flush=True)
 
 
-def _measure_report(design, cycles, rounds, samples) -> dict:
+def _measure_report(design, cycles, rounds, samples, tlb_backend="xla",
+                    devices=0) -> dict:
     return {
         "design": design,
         "cycles": cycles,
@@ -329,8 +405,13 @@ def _measure_report(design, cycles, rounds, samples) -> dict:
         "samples": {n: [float(x) for x in v] for n, v in samples.items()},
         "meta": {
             "jax": jax.__version__,
+            "jax_version": jax.__version__,
             "platform": platform.platform(),
             "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "device_count": jax.device_count(),
+            "tlb_backend": tlb_backend,
+            "devices": devices if devices and devices > 1 else 1,
             # compiled programs for the grid scenario's 8-design sweep
             "signature_groups": _signature_groups("repro"),
         },
@@ -338,8 +419,10 @@ def _measure_report(design, cycles, rounds, samples) -> dict:
 
 
 def run_bench(design: str = "mask", cycles: int = 8_000, rounds: int = 5,
-              out_path: Path = OUT_PATH) -> dict:
-    scen = _scenarios(design, cycles)
+              out_path: Path = OUT_PATH, tlb_backend: str = "xla",
+              devices: int = 0) -> dict:
+    scen = _scenarios(design, cycles, tlb_backend=tlb_backend,
+                      devices=devices)
     for name, (call, _) in scen.items():   # compile + warm
         t0 = time.perf_counter()
         call()
@@ -354,7 +437,8 @@ def run_bench(design: str = "mask", cycles: int = 8_000, rounds: int = 5,
             samples[name].append(steps / dt)
         print(f"# round {r + 1}/{rounds} done", flush=True)
 
-    result = _measure_report(design, cycles, rounds, samples)
+    result = _measure_report(design, cycles, rounds, samples,
+                             tlb_backend=tlb_backend, devices=devices)
     out_path.write_text(json.dumps(result, indent=2) + "\n")
     print(json.dumps({k: result[k] for k in ("design", "cycles",
                                              "steps_per_sec")}, indent=2))
@@ -377,14 +461,40 @@ def main() -> None:
     ap.add_argument("--no-compile-cache", action="store_true",
                     help="disable the persistent JAX compilation cache "
                          "(default: cache compiles under .jax_cache/)")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="shard the grid sweep's rows over N devices "
+                         "(adds the grid_sharded scenario); on a CPU host "
+                         "with fewer visible devices the benchmark "
+                         "re-executes itself with "
+                         "--xla_force_host_platform_device_count=N")
+    ap.add_argument("--tlb-backend", default="xla",
+                    choices=["xla", "pallas", "pallas-interpret"],
+                    help="fused shared-round backend for the current tree "
+                         "(baseline copies under --compare always run "
+                         "their own default path)")
     args = ap.parse_args()
+    if args.devices > 1 and jax.device_count() < args.devices:
+        # the device-count flag must be set before the backend exists, so
+        # re-exec into a child that sees the forced host devices
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = (
+            env.get("XLA_FLAGS", "") +
+            f" --xla_force_host_platform_device_count={args.devices}"
+        ).strip()
+        print(f"# re-executing with {args.devices} forced host devices",
+              flush=True)
+        raise SystemExit(subprocess.call(
+            [sys.executable, "-m", "benchmarks.perf", *sys.argv[1:]],
+            env=env, cwd=REPO_ROOT))
     if not args.no_compile_cache:
         enable_compilation_cache()
     if args.compare:
         run_compare(args.compare, args.design, args.cycles, args.rounds,
-                    args.out, keep_baseline=args.keep_baseline)
+                    args.out, keep_baseline=args.keep_baseline,
+                    tlb_backend=args.tlb_backend, devices=args.devices)
     else:
-        run_bench(args.design, args.cycles, args.rounds, args.out)
+        run_bench(args.design, args.cycles, args.rounds, args.out,
+                  tlb_backend=args.tlb_backend, devices=args.devices)
 
 
 if __name__ == "__main__":

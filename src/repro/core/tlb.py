@@ -140,7 +140,8 @@ def fill_bank(state: TLBState, vpn, asid, do_fill, time) -> TLBState:
 
 
 def access_fused(state: TLBState, vpn, asid, active, may_fill, time,
-                 n_waves: int = 1, track_asids: bool = True
+                 n_waves: int = 1, track_asids: bool = True,
+                 backend: str = "xla",
                  ) -> Tuple[TLBState, jax.Array, jax.Array]:
     """One-call probe+fill for a whole cycle's sub-accesses ("waves").
 
@@ -183,7 +184,30 @@ def access_fused(state: TLBState, vpn, asid, active, may_fill, time,
     `track_asids=False` skips the ASID plane entirely (tag-only caches
     like the line-addressed L2$, whose tags are already unique).
     Returns (state', hit (N,) bool, filled (N,) bool).
+
+    `backend` selects the implementation of the round itself:
+    "xla" (default) is the inline jnp path below; "pallas" lowers the
+    `kernels/fused_tlb` Pallas kernel (TPU/GPU — raises elsewhere, no
+    silent fallback); "pallas-interpret" runs the same kernel through the
+    Pallas interpreter on any platform. The counter arithmetic is shared,
+    and the kernel mirrors this function op for op, so all backends are
+    bit-for-bit identical — `sim/config.py::SimConfig.tlb_backend`
+    resolves the knob (env `REPRO_TLB_BACKEND`) and threads it here.
     """
+    if backend not in (None, "xla"):
+        # lazy import: the Pallas machinery stays off the default path
+        from repro.kernels.fused_tlb.ops import fused_tlb_access
+        tags, asids, lru, hit_i, filled_i = fused_tlb_access(
+            state.tags, state.asids, state.lru, vpn,
+            jnp.asarray(asid, jnp.int32), active, may_fill, time,
+            n_waves=n_waves, track_asids=track_asids,
+            interpret=True if backend == "pallas-interpret" else None)
+        hit = hit_i != 0
+        filled = filled_i != 0
+        hits = state.hits + hit.sum(dtype=jnp.int32)
+        misses = state.misses + (active & ~hit).sum(dtype=jnp.int32)
+        return (state._replace(tags=tags, asids=asids, lru=lru,
+                               hits=hits, misses=misses), hit, filled)
     n_sets, n_ways = state.tags.shape
     N = vpn.shape[0]
     W = n_waves

@@ -1,3 +1,10 @@
 # OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
 # for compute hot-spots the paper itself optimizes with a custom
 # kernel. Leave this package empty if the paper has none.
+#
+# fused_tlb/ is the simulator's hot spot: the fused cross-wave shared
+# L2$/PWC round (core/tlb.py::access_fused) as a Pallas kernel, selected
+# via SimConfig.tlb_backend / REPRO_TLB_BACKEND (xla | pallas |
+# pallas-interpret) and parity-pinned bit-for-bit against the XLA path.
+# It replaces the retired seed tlb_probe/ kernel, whose single-round
+# probe+fill contract predated the fused semantics.

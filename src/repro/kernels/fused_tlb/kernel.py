@@ -1,0 +1,160 @@
+"""Pallas kernel for the fused cross-wave TLB round (`tlb.access_fused`).
+
+One call services ALL of a simulator cycle's sub-accesses to a shared
+cache structure (the L2$ line cache, the PWC) with the cross-wave
+semantics of `repro.core.tlb.access_fused` (PR 4's fused contract, which
+obsoleted the seed's single-round `tlb_probe` kernel):
+
+  * probe against the start-of-cycle tags (per-lane gather, no sort);
+  * per-(set, wave) fill ports — the first fill candidate of a set
+    within a wave wins, resolved by a scratch-table scatter-min;
+  * duplicate suppression — a flat position (core) whose line was
+    already a fill candidate in an earlier wave forwards instead of
+    filling again;
+  * k-th-LRU victim chains — the k-th winning wave of a set takes the
+    k-th least-recently-used way (stable (lru, way) pairwise rank);
+  * forwarding — the final hit resolution re-probes the post-fill tags,
+    so a lane whose line was filled this cycle by anyone observes it.
+
+State planes are aliased in/out (`input_output_aliases`) — the kernel
+mutates the cache in place, as the hardware structure does. The whole
+problem is a few hundred int32 lanes over a (sets, ways) table, so
+grid=() and the kernel is a single fused VMEM pass.
+
+The arithmetic mirrors `repro.core.tlb.access_fused` op for op (integer
+gathers/scatters only), so interpret mode is bit-for-bit identical to
+the XLA path — the float-hex parity tests pin that. Iotas are built
+with 2-D `broadcasted_iota` (TPU requires >=2-D iota); the dynamic
+gathers/scatters follow the repo's established TLB-kernel idiom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _iota_1d(n: int) -> jax.Array:
+    """(n,) int32 iota via a 2-D broadcasted_iota (TPU-safe)."""
+    return jax.lax.broadcasted_iota(jnp.int32, (n, 1), 0).reshape(n)
+
+
+def _kernel(n_waves: int, track_asids: bool,
+            tags_ref, asids_ref, lru_ref, vpn_ref, asid_ref, act_ref,
+            mayf_ref, time_ref,
+            tags_out, asids_out, lru_out, hit_out, filled_out):
+    tags = tags_ref[...]                         # (sets, ways) int32
+    asids = asids_ref[...]
+    lru = lru_ref[...]
+    vpn = vpn_ref[...]                           # (N,) int32
+    asid = asid_ref[...]
+    active = act_ref[...] != 0
+    may_fill = mayf_ref[...] != 0
+    t = time_ref[0]
+
+    n_sets, n_ways = tags.shape
+    N = vpn.shape[0]
+    W = n_waves
+    C = N // W
+    set_ix = (vpn % n_sets if n_sets > 1
+              else jnp.zeros_like(vpn)).astype(jnp.int32)
+
+    rows_t = tags[set_ix]                        # (N, ways)
+    match = rows_t == vpn[:, None]
+    if track_asids:
+        match = match & (asids[set_ix] == asid[:, None])
+    pre_hit = match.any(axis=1) & active
+    way = jnp.argmax(match, axis=1).astype(jnp.int32)
+
+    # ---- fill candidates --------------------------------------------------
+    cand = active & ~pre_hit & may_fill
+    if W > 1:
+        # duplicate suppression per flat position (core): an earlier-wave
+        # candidate with the same line makes later waves forward, not fill
+        lines_wc = vpn.reshape(W, C)
+        cand_wc = cand.reshape(W, C)
+        tri_w = (jax.lax.broadcasted_iota(jnp.int32, (W, W, 1), 0)
+                 < jax.lax.broadcasted_iota(jnp.int32, (W, W, 1), 1))
+        dup = ((lines_wc[:, None, :] == lines_wc[None, :, :])
+               & tri_w & cand_wc[:, None, :]).any(0).reshape(N)
+        cand = cand & ~dup
+
+    # ---- per-(set, wave) fill port via a scratch table --------------------
+    wave = jax.lax.broadcasted_iota(jnp.int32, (W, C), 0).reshape(N)
+    order = _iota_1d(N)
+    key = set_ix * W + wave
+    scratch = jnp.full((n_sets * W,), jnp.int32(N), jnp.int32)
+    scratch = scratch.at[jnp.where(cand, key, n_sets * W)].min(
+        order, mode="drop")
+    winner = cand & (scratch[key] == order)
+    filled_sw = (scratch.reshape(n_sets, W) < N)[set_ix]        # (N, W)
+    earlier_w = _iota_1d(W)[None, :] < wave[:, None]            # (N, W)
+    rank = (filled_sw & earlier_w).sum(1)
+    # a set accepts at most n_ways fills per cycle (n_waves > n_ways only)
+    winner = winner & (rank < n_ways)
+
+    # ---- victim = rank-th least-recently-used way -------------------------
+    lru_rows = lru[set_ix]                       # (N, ways)
+    widx_col = jax.lax.broadcasted_iota(jnp.int32, (1, n_ways, n_ways), 2)
+    widx_row = jax.lax.broadcasted_iota(jnp.int32, (1, n_ways, n_ways), 1)
+    lru_less = (lru_rows[:, None, :] < lru_rows[:, :, None]) | \
+        ((lru_rows[:, None, :] == lru_rows[:, :, None])
+         & (widx_col < widx_row))
+    way_rank = lru_less.sum(-1)                  # (N, ways)
+    victim = jnp.argmax(way_rank == jnp.minimum(rank, n_ways - 1)[:, None],
+                        axis=1).astype(jnp.int32)
+
+    # ---- one merged update pass per plane ---------------------------------
+    flat = jnp.where(pre_hit, set_ix * n_ways + way,
+                     jnp.where(winner, set_ix * n_ways + victim,
+                               n_sets * n_ways))
+    tags = tags.reshape(-1).at[flat].set(vpn, mode="drop") \
+        .reshape(n_sets, n_ways)
+    lru = lru.reshape(-1).at[flat].set(t, mode="drop") \
+        .reshape(n_sets, n_ways)
+    if track_asids:
+        asids = asids.reshape(-1).at[flat].set(asid, mode="drop") \
+            .reshape(n_sets, n_ways)
+
+    # ---- final hit resolution (forwarding falls out of the fills) ---------
+    post = tags[set_ix] == vpn[:, None]
+    if track_asids:
+        post = post & (asids[set_ix] == asid[:, None])
+    hit = pre_hit | (active & ~winner & post.any(axis=1))
+
+    tags_out[...] = tags
+    asids_out[...] = asids
+    lru_out[...] = lru
+    hit_out[...] = hit.astype(jnp.int32)
+    filled_out[...] = winner.astype(jnp.int32)
+
+
+def fused_tlb_round(tags, asids, lru, vpn, asid, active, may_fill, time, *,
+                    n_waves: int = 1, track_asids: bool = True,
+                    interpret: bool = False):
+    """One fused cross-wave probe+fill round over a (sets, ways) cache.
+
+    Returns (tags', asids', lru', hit (N,) int32, filled (N,) int32);
+    the hit/miss counter arithmetic stays with the caller
+    (`repro.core.tlb.access_fused` keeps it identical across backends).
+    """
+    n_sets, n_ways = tags.shape
+    N = vpn.shape[0]
+    if N % n_waves:
+        raise ValueError(f"lane count {N} not divisible by n_waves={n_waves}")
+    t_arr = jnp.full((1,), time, jnp.int32)
+    return pl.pallas_call(
+        functools.partial(_kernel, n_waves, track_asids),
+        out_shape=[
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((n_sets, n_ways), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+            jax.ShapeDtypeStruct((N,), jnp.int32),
+        ],
+        input_output_aliases={0: 0, 1: 1, 2: 2},
+        interpret=interpret,
+    )(tags, asids, lru, vpn, asid.astype(jnp.int32),
+      active.astype(jnp.int32), may_fill.astype(jnp.int32), t_arr)

@@ -1,0 +1,25 @@
+"""Reference oracle for the fused TLB round: the XLA `access_fused` path.
+
+The simulator's own `repro.core.tlb.access_fused` (backend="xla") IS the
+contract — the kernel tests compare the Pallas outputs against it
+plane-for-plane, so any drift between the two implementations fails
+loudly instead of skewing simulated miss rates.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import tlb as tlb_mod
+
+
+def fused_tlb_access_ref(tags, asids, lru, vpn, asid, active, may_fill,
+                         time, *, n_waves=1, track_asids=True):
+    """Same signature/returns as `ops.fused_tlb_access`, via the XLA path."""
+    zero = jnp.zeros((), jnp.int32)
+    state = tlb_mod.TLBState(tags=tags, asids=asids, lru=lru,
+                             hits=zero, misses=zero)
+    state, hit, filled = tlb_mod.access_fused(
+        state, vpn, asid, active.astype(bool), may_fill.astype(bool), time,
+        n_waves=n_waves, track_asids=track_asids, backend="xla")
+    return (state.tags, state.asids, state.lru,
+            hit.astype(tags.dtype), filled.astype(tags.dtype))

@@ -395,7 +395,8 @@ def translation_probe(cfg: SimConfig, dp: DesignParams, trans: TransState,
         dp.use_pwc,
         lambda st: tlb_mod.access_fused(
             st, walk_lines, jnp.zeros_like(walk_lines), walk_active,
-            jnp.ones((L * C,), bool), t, n_waves=L, track_asids=False)[:2],
+            jnp.ones((L * C,), bool), t, n_waves=L, track_asids=False,
+            backend=cfg.tlb_backend)[:2],
         lambda st: (st, jnp.zeros((L * C,), bool)),
         trans.pwc)
     walk_go = walk_active & ~pwc_hit
@@ -505,7 +506,8 @@ def shared_memory_access(cfg: SimConfig, dp: DesignParams, data: DataState,
     # is tag-only and the ASID plane is skipped entirely)
     l2c, hit, _ = tlb_mod.access_fused(
         l2c, lines * cfg.l2_sets + key, jnp.zeros_like(lines), go,
-        may_fill, t, n_waves=max(L + K, 1), track_asids=False)
+        may_fill, t, n_waves=max(L + K, 1), track_asids=False,
+        backend=cfg.tlb_backend)
     lat = jnp.where(hit, cfg.lat_l2_cache, 0)
     miss = go & ~hit
 

@@ -154,6 +154,43 @@ def _mix_matrix(benches: Sequence[Optional[str]]) -> np.ndarray:
     return app_matrix(list(benches))
 
 
+def _row_sharding(devices: int):
+    """NamedSharding splitting a leading "rows" axis over `devices`.
+
+    Grid rows are fully independent under vmap (no cross-row ops, so no
+    collectives): placing the stacked (DesignParams, pm) rows on a 1-D
+    device mesh makes XLA partition the whole scanned program row-wise —
+    same math per row, so results stay bit-for-bit equal to the
+    single-device path. More devices than are visible is an error; spawn
+    a subprocess with `XLA_FLAGS=--xla_force_host_platform_device_count=N`
+    to split a CPU host (see tests/test_sharded_grid.py).
+    """
+    devs = jax.devices()
+    if devices > len(devs):
+        raise ValueError(
+            f"devices={devices} but only {len(devs)} JAX devices visible; "
+            "on CPU, relaunch with XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={devices}")
+    mesh = jax.sharding.Mesh(np.asarray(devs[:devices]), ("rows",))
+    return jax.sharding.NamedSharding(mesh,
+                                      jax.sharding.PartitionSpec("rows"))
+
+
+def _pad_rows(tree, multiple: int):
+    """Pad every leaf's leading axis up to a multiple of `multiple` by
+    repeating the first rows; returns (padded_tree, real_row_count).
+
+    Repeated leading rows keep every row a valid simulation (no NaN/zero
+    design surprises); callers slice results back to the real count.
+    """
+    rows = jax.tree_util.tree_leaves(tree)[0].shape[0]
+    pad = (-rows) % multiple
+    if pad:
+        tree = jax.tree_util.tree_map(
+            lambda x: jnp.concatenate([x, x[:pad]], axis=0), tree)
+    return tree, rows
+
+
 def run_mix(design: DesignLike, benches: Sequence[Optional[str]],
             cycles: int = 60_000) -> Dict:
     """Co-run N apps under a design; returns per-app stats.
@@ -193,7 +230,8 @@ def run_batch(design: DesignLike,
 def run_grid(designs: Sequence[DesignLike],
              bench_mixes: Sequence[Tuple[Optional[str], ...]],
              cycles: int = 60_000,
-             max_rows: int = 64) -> List[List[Dict]]:
+             max_rows: int = 64,
+             devices: Optional[int] = None) -> List[List[Dict]]:
     """Run the full designs x mixes cross product, one compile per
     static-signature group and as few device executions as `max_rows`
     allows.
@@ -208,6 +246,14 @@ def run_grid(designs: Sequence[DesignLike],
     under vmap, so chunking cannot change them). This bounds peak state
     memory; per-sim throughput is flat in the batch width anyway, so
     narrower chunks cost nothing but per-call dispatch.
+
+    `devices=N` (> 1) shards each chunk's rows over the first N visible
+    JAX devices on a 1-D mesh (`_row_sharding`), padding the row count
+    up to a multiple of N with repeated rows (`_pad_rows`, sliced back
+    off). Rows are independent, so sharded results are bit-for-bit
+    identical to the single-device path (pinned by
+    tests/test_sharded_grid.py); the per-call row cap scales to
+    `max_rows * devices` so each device still sees at most `max_rows`.
     Returns `stats[d][m]` aligned with the inputs — bit-for-bit equal to
     `run_mix(designs[d], bench_mixes[m], cycles)`.
     """
@@ -220,7 +266,9 @@ def run_grid(designs: Sequence[DesignLike],
     n = sizes.pop()
     M = len(bench_mixes)
     pms = np.stack([_mix_matrix(m) for m in bench_mixes])
-    designs_per_call = max(max_rows // M, 1)
+    sharding = _row_sharding(devices) if devices and devices > 1 else None
+    row_cap = max_rows * (devices if sharding is not None else 1)
+    designs_per_call = max(row_cap // M, 1)
 
     out: List[List[Optional[Dict]]] = [[None] * M for _ in ds]
     groups: Dict[object, List[int]] = {}
@@ -242,7 +290,13 @@ def run_grid(designs: Sequence[DesignLike],
                 lambda *leaves: jnp.repeat(jnp.stack(leaves), M, axis=0),
                 *dps)
             pm_stack = jnp.asarray(np.tile(pms, (len(idxs), 1, 1)))
+            if sharding is not None:
+                (dp_stack, pm_stack), _ = _pad_rows((dp_stack, pm_stack),
+                                                    devices)
+                dp_stack, pm_stack = jax.device_put((dp_stack, pm_stack),
+                                                    sharding)
             # one bulk device->host transfer of the chunk's final state
+            # (padding rows ride along; the loop below never reads them)
             final = jax.device_get(
                 _compiled_grid_run(ccfg)(dp_stack, pm_stack))
             for g, di in enumerate(idxs):
@@ -510,7 +564,8 @@ class Experiment:
 def sweep(designs: Sequence[DesignLike],
           mixes: Sequence, cycles: int = 60_000,
           solo_baselines: bool = True,
-          grid: bool = True) -> Dict[str, ExperimentResult]:
+          grid: bool = True,
+          devices: Optional[int] = None) -> Dict[str, ExperimentResult]:
     """Run several designs over the same mixes, keyed by design name.
 
     With `grid=True` (default) the designs are grouped by static
@@ -520,7 +575,10 @@ def sweep(designs: Sequence[DesignLike],
     8-design ablation grid compiles two programs instead of eight and
     executes two device calls per n_apps. `grid=False` keeps the
     per-design `Experiment` loop; results are bit-for-bit identical
-    either way (pinned by tests)."""
+    either way (pinned by tests).
+
+    `devices=N` shards the grid rows over N devices (see `run_grid`);
+    it requires the grid path."""
     ds: List[Design] = []
     for d in designs:
         dd = as_design(d)
@@ -528,11 +586,14 @@ def sweep(designs: Sequence[DesignLike],
             raise ValueError(f"duplicate design name in sweep: {dd.name!r}")
         ds.append(dd)
     if not grid:
+        if devices and devices > 1:
+            raise ValueError("devices > 1 requires the grid path "
+                             "(sweep(grid=True))")
         return {d.name: Experiment(d, tuple(mixes), cycles).run(
             solo_baselines=solo_baselines) for d in ds}
     norm = _normalize_mixes(mixes)
     plans = _mix_plan(norm, solo_baselines)
-    stats = {n: run_grid(ds, plan.rows, cycles)
+    stats = {n: run_grid(ds, plan.rows, cycles, devices=devices)
              for n, plan in plans.items()}        # stats[n][design][row]
     return {d.name: _assemble_result(
         d, cycles, len(norm), plans, {n: stats[n][i] for n in plans})

@@ -1,9 +1,26 @@
 import os
 
-# smoke tests and benches must see the real (single) device — the 512-device
-# override belongs ONLY to the dry-run (see launch/dryrun.py)
-assert "xla_force_host_platform_device_count" not in os.environ.get("XLA_FLAGS", "")
+import pytest
+
+
+@pytest.fixture(autouse=True)
+def _single_device_guard(request):
+    """Smoke tests and benches must see the real (single) device — the
+    512-device override belongs ONLY to the dry-run (see launch/dryrun.py).
+
+    Tests marked `multi_device` are exempt: they spawn their own
+    subprocesses with `--xla_force_host_platform_device_count=N` (the
+    flag must be set before jax import, hence the subprocess — this
+    process stays single-device either way).
+    """
+    if request.node.get_closest_marker("multi_device") is None:
+        assert "xla_force_host_platform_device_count" not in \
+            os.environ.get("XLA_FLAGS", "")
+    yield
 
 
 def pytest_configure(config):
     config.addinivalue_line("markers", "slow: long-running integration test")
+    config.addinivalue_line(
+        "markers", "multi_device: spawns multi-device subprocesses "
+        "(exempt from the single-device XLA_FLAGS guard)")

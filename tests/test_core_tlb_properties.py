@@ -33,6 +33,88 @@ def test_tlb_property_fill_probe(vpns, asid):
             assert bool(hit[i]), (vpns, i)
 
 
+# ------------------------------------------------------- access_fused
+# The fused-round contract, checked identically against both backends
+# (the inline XLA path and the Pallas kernel in interpret mode) from an
+# empty cache (tags -1, random LRU): every tag change is then a fill,
+# which makes the port/victim/forwarding properties directly observable.
+
+_SETS, _WAYS = 4, 2
+
+
+def _fused_round(backend, lru0, vpn, act, mf, n_waves):
+    tags = jnp.full((_SETS, _WAYS), -1, jnp.int32)
+    state = tlb_mod.TLBState(
+        tags=tags, asids=jnp.full((_SETS, _WAYS), -1, jnp.int32),
+        lru=jnp.asarray(lru0, jnp.int32).reshape(_SETS, _WAYS),
+        hits=jnp.zeros((), jnp.int32), misses=jnp.zeros((), jnp.int32))
+    state, hit, filled = tlb_mod.access_fused(
+        state, jnp.asarray(vpn, jnp.int32), jnp.zeros(len(vpn), jnp.int32),
+        jnp.asarray(act), jnp.asarray(mf), 7,
+        n_waves=n_waves, track_asids=False, backend=backend)
+    return (np.asarray(state.tags), np.asarray(state.lru),
+            np.asarray(hit), np.asarray(filled))
+
+
+@pytest.mark.parametrize("backend", ["xla", "pallas-interpret"])
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_access_fused_contract_properties(backend, data):
+    W = data.draw(st.sampled_from([1, 2, 3]), label="n_waves")
+    C = data.draw(st.sampled_from([1, 2, 4]), label="lanes_per_wave")
+    N = W * C
+    vpn = np.asarray(data.draw(st.lists(
+        st.integers(0, 30), min_size=N, max_size=N)))
+    act = np.asarray(data.draw(st.lists(
+        st.booleans(), min_size=N, max_size=N)))
+    mf = np.asarray(data.draw(st.lists(
+        st.booleans(), min_size=N, max_size=N)))
+    lru0 = np.asarray(data.draw(st.lists(
+        st.integers(0, 50), min_size=_SETS * _WAYS,
+        max_size=_SETS * _WAYS))).reshape(_SETS, _WAYS)
+    tags1, lru1, hit, filled = _fused_round(backend, lru0, vpn, act, mf, W)
+
+    set_ix = vpn % _SETS
+    wave = np.arange(N) // C
+
+    # fill-port uniqueness: at most one fill per (set, wave)
+    ports = list(zip(set_ix[filled].tolist(), wave[filled].tolist()))
+    assert len(ports) == len(set(ports)), ports
+
+    # victim-chain monotonicity: the r fills a set received landed in
+    # exactly its r least-recently-used ways (stable (lru, way) order)
+    for s in range(_SETS):
+        changed = set(np.nonzero(tags1[s] != -1)[0].tolist())
+        r = int((filled & (set_ix == s)).sum())
+        lru_order = np.lexsort((np.arange(_WAYS), lru0[s]))
+        assert changed == set(lru_order[:r].tolist()), (s, tags1, lru0)
+
+    # forwarding == post-fill re-probe: from an empty cache there are no
+    # pre-hits, so a lane hits iff it is active, did not fill itself,
+    # and its line is present in the post-fill tags of its set
+    expect_hit = act & ~filled & \
+        (tags1[set_ix] == vpn[:, None]).any(1)
+    np.testing.assert_array_equal(hit, expect_hit)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_access_fused_backends_bitwise_equal(data):
+    W = data.draw(st.sampled_from([1, 2, 3]))
+    C = data.draw(st.sampled_from([1, 2, 4]))
+    N = W * C
+    vpn = data.draw(st.lists(st.integers(0, 30), min_size=N, max_size=N))
+    act = data.draw(st.lists(st.booleans(), min_size=N, max_size=N))
+    mf = data.draw(st.lists(st.booleans(), min_size=N, max_size=N))
+    lru0 = np.asarray(data.draw(st.lists(
+        st.integers(0, 50), min_size=_SETS * _WAYS,
+        max_size=_SETS * _WAYS))).reshape(_SETS, _WAYS)
+    a = _fused_round("xla", lru0, vpn, act, mf, W)
+    b = _fused_round("pallas-interpret", lru0, vpn, act, mf, W)
+    for xa, xb, name in zip(a, b, ("tags", "lru", "hit", "filled")):
+        np.testing.assert_array_equal(xa, xb, err_msg=name)
+
+
 @settings(max_examples=30, deadline=None)
 @given(st.integers(0, 2**20 - 1), st.integers(0, 2**20 - 1),
        st.integers(0, 63))

@@ -1,0 +1,62 @@
+"""Device-sharded grid sweeps == single-device, float-hex.
+
+`--xla_force_host_platform_device_count` must be set before jax import,
+so the multi-device half runs in a subprocess (the
+tests/test_data_sharding_hlo.py idiom); this process stays on the real
+single device. The subprocess runs the SAME sweep twice — single-device
+and sharded over 4 host devices — and compares every stat float-hex,
+solo baselines included. 7 rows per signature group over 4 devices also
+exercises the row padding (7 -> 8, repeated rows sliced back off).
+"""
+import os
+import subprocess
+import sys
+
+import pytest
+
+_CODE = r"""
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=4")
+import jax
+import numpy as np
+assert jax.device_count() == 4, jax.device_count()
+from repro.sim import runner as R
+
+designs = ["mask", "gpu-mmu"]
+mixes = [("3DS", "BLK"), ("MUM", "RED"), ("3DS", "MUM")]
+kw = dict(cycles=120, solo_baselines=True, grid=True)
+single = R.sweep(designs, mixes, **kw)
+sharded = R.sweep(designs, mixes, devices=4, **kw)
+for name in single:
+    ra, rb = single[name], sharded[name]
+    assert len(ra) == len(rb)
+    for xa, xb in zip(ra, rb):
+        for k in xa.raw:
+            ha = [float(v).hex() for v in np.atleast_1d(xa.raw[k]).ravel()]
+            hb = [float(v).hex() for v in np.atleast_1d(xb.raw[k]).ravel()]
+            assert ha == hb, (name, k, ha, hb)
+    assert ra.solo_ipc == rb.solo_ipc, name
+
+# asking for more devices than are visible must fail loudly
+try:
+    R.run_grid(designs, mixes, cycles=120, devices=64)
+except ValueError as e:
+    assert "devices=64" in str(e), e
+else:
+    raise AssertionError("run_grid(devices=64) should have raised")
+print("SHARDED_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+@pytest.mark.multi_device
+def test_sharded_sweep_matches_single_device():
+    env = dict(os.environ,
+               PYTHONPATH="src",
+               JAX_PLATFORMS="cpu")  # skip any TPU/GPU probe in the child
+    env.pop("XLA_FLAGS", None)
+    out = subprocess.run([sys.executable, "-c", _CODE], capture_output=True,
+                         text=True, timeout=900, env=env)
+    assert "SHARDED_PARITY_OK" in out.stdout, \
+        (out.stdout[-2000:], out.stderr[-2000:])

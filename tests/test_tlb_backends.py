@@ -1,0 +1,78 @@
+"""Backend parity + dispatch rules for the fused shared-round backends.
+
+The Pallas kernel (interpret mode on CPU) must be bit-for-bit identical
+to the inline XLA path — same float-hex stats across every builtin
+design and every supported app count — and requesting a real Pallas
+lowering on a platform that has none must raise, never silently fall
+back (acceptance criteria of the backend scale-out PR).
+"""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.design import BUILTIN_DESIGNS, get_design
+from repro.sim import runner as R
+from repro.sim.config import SimConfig, resolve_tlb_backend
+
+BENCHES = ("3DS", "BLK", "MUM")
+DESIGN_NAMES = tuple(d.name for d in BUILTIN_DESIGNS)
+
+
+@functools.lru_cache(maxsize=None)
+def _stats(design_name: str, n_apps: int, backend: str):
+    cfg = SimConfig(n_cores=6, warps_per_core=8, n_apps=n_apps,
+                    sim_cycles=300,
+                    design=get_design(design_name).with_(epoch_cycles=100),
+                    tlb_backend=backend)
+    pm = jnp.asarray(R._mix_matrix(list(BENCHES[:n_apps])))
+    return R._stats(cfg, R._compiled_run(cfg)(pm))
+
+
+@pytest.mark.parametrize("n_apps", [1, 2, 3])
+@pytest.mark.parametrize("name", DESIGN_NAMES)
+def test_backend_parity_float_hex(name, n_apps):
+    """pallas-interpret == xla, float-hex, all 8 designs x n_apps 1..3."""
+    a = _stats(name, n_apps, "xla")
+    b = _stats(name, n_apps, "pallas-interpret")
+    assert set(a) == set(b)
+    for k in a:
+        ha = [float(v).hex() for v in np.atleast_1d(a[k]).ravel()]
+        hb = [float(v).hex() for v in np.atleast_1d(b[k]).ravel()]
+        assert ha == hb, (name, n_apps, k)
+
+
+def test_pallas_backend_requires_lowering():
+    """'pallas' on a platform without a lowering raises at config time."""
+    if jax.default_backend() in ("tpu", "gpu"):
+        pytest.skip("real Pallas lowering available here")
+    with pytest.raises(RuntimeError, match="no Pallas lowering"):
+        SimConfig(tlb_backend="pallas")
+
+
+def test_backend_env_resolution(monkeypatch):
+    monkeypatch.delenv("REPRO_TLB_BACKEND", raising=False)
+    assert SimConfig().tlb_backend == "xla"
+    monkeypatch.setenv("REPRO_TLB_BACKEND", "pallas-interpret")
+    assert SimConfig().tlb_backend == "pallas-interpret"
+    # explicit value wins over env
+    assert SimConfig(tlb_backend="xla").tlb_backend == "xla"
+    monkeypatch.setenv("REPRO_TLB_BACKEND", "nope")
+    with pytest.raises(ValueError, match="tlb_backend"):
+        SimConfig()
+
+
+def test_interpret_env_opt_in(monkeypatch):
+    if jax.default_backend() in ("tpu", "gpu"):
+        pytest.skip("real Pallas lowering available here")
+    monkeypatch.setenv("REPRO_TLB_INTERPRET", "1")
+    assert resolve_tlb_backend("pallas") == "pallas-interpret"
+
+
+def test_backend_keys_compile_cache():
+    """Distinct backends must be distinct compile-cache keys."""
+    a = SimConfig(tlb_backend="xla")
+    b = SimConfig(tlb_backend="pallas-interpret")
+    assert a != b and hash(a) != hash(b)
