@@ -5,6 +5,16 @@ Measures steps/sec of the compiled one-cycle pipeline in four shapes:
   2app    — one 2-app mix (the paper's pair setting)
   4app    — one 4-app mix (N-way sharing)
   batch8  — eight 2-app mixes vmapped through one executable
+  churn   — the same 2-app mix run through the SEGMENTED runner
+            (`run_trace`, K=4 epoch-aligned segments, constant
+            membership) so the scenario's work is identical to a
+            monolithic run of the same total cycles: its rate vs
+            `2app` — and its `--compare` ratio against a
+            pre-segmentation baseline tree, which falls back to the
+            monolithic `run_mix` of the same workload — isolates the
+            segmentation overhead (per-boundary state round-trip +
+            host-side snapshot), honestly, rather than timing a
+            different workload
   grid    — the full 8-design x 2-mix ablation sweep at the sweep-
             iteration scale (min(--cycles, GRID_CYCLES) cycles): one
             compiled, vmapped grid execution per static-signature group
@@ -54,6 +64,7 @@ Run:  PYTHONPATH=src python -m benchmarks.perf [--cycles N] [--rounds R]
 from __future__ import annotations
 
 import argparse
+import atexit
 import dataclasses
 import importlib
 import json
@@ -86,6 +97,13 @@ GRID_N_MIXES = 2     # grid scenario: all 8 paper designs x this many pairs
 # (flat per-sim batch scaling, measured G=2..14; see README), so the
 # saving there is the fixed compile time, not a proportional factor.
 GRID_CYCLES = 2_000
+CHURN_SEGMENTS = 4   # churn scenario: K segments of cycles/K each
+# Subprocess guard rails: a wedged `git` (e.g. a lock held by another
+# process) or a hung re-exec child must fail the benchmark loudly, not
+# hang CI forever. Generous on purpose — these bound pathology, they are
+# not performance budgets.
+GIT_TIMEOUT_S = 120
+REEXEC_TIMEOUT_S = 4 * 3600
 
 
 def enable_compilation_cache(cache_dir: Path = CACHE_DIR) -> None:
@@ -154,11 +172,31 @@ def _scenarios(design: str, cycles: int, pkg: str = "repro",
         fn = runner_mod._compiled_batch_run(cfg)
         return (lambda: jax.block_until_ready(fn(pm))), cycles * len(mixes)
 
+    def churn():
+        """Segmented runner over the 2app workload (constant membership,
+        K = CHURN_SEGMENTS segments). On trees that predate `run_trace`
+        the MONOLITHIC `run_mix` of the same total cycles stands in, so
+        a --compare ratio measures segmentation overhead on identical
+        work. Runs the tree's default TLB backend (run_trace owns its
+        SimConfig)."""
+        segc = max(1, cycles // CHURN_SEGMENTS)
+        total = segc * CHURN_SEGMENTS
+        mix = ("3DS", "BLK")
+        if hasattr(runner_mod, "run_trace"):
+            call = (lambda: runner_mod.run_trace(
+                design, [mix] * CHURN_SEGMENTS, seg_cycles=segc,
+                collect_segments=False))
+        else:
+            call = (lambda: runner_mod.run_mix(design, list(mix),
+                                               cycles=total))
+        return call, total
+
     mix4 = workloads_mod.mix_workloads(seed=7, n_mixes=1, n_apps=4)[0]
     scen = {
         "2app": single(["3DS", "BLK"]),
         "4app": single(list(mix4)),
         "batch8": batch(workloads_mod.pair_workloads()[:8]),
+        "churn": churn(),
     }
     if include_grid:
         scen["grid"] = _grid_sweep(pkg, min(cycles, GRID_CYCLES),
@@ -239,7 +277,7 @@ def _materialize_baseline(ref: str) -> str:
     (imports rewritten), put it on sys.path, and return the resolved sha."""
     sha = subprocess.run(["git", "rev-parse", ref], cwd=REPO_ROOT,
                          capture_output=True, text=True,
-                         check=True).stdout.strip()
+                         check=True, timeout=GIT_TIMEOUT_S).stdout.strip()
     dest = COMPARE_DIR / sha[:12]
     pkg_dir = dest / "src" / "repro_base"
     if not pkg_dir.exists():
@@ -251,7 +289,8 @@ def _materialize_baseline(ref: str) -> str:
         shutil.rmtree(tmp, ignore_errors=True)
         tar_bytes = subprocess.run(
             ["git", "archive", "--format=tar", sha, "src/repro"],
-            cwd=REPO_ROOT, capture_output=True, check=True).stdout
+            cwd=REPO_ROOT, capture_output=True, check=True,
+            timeout=GIT_TIMEOUT_S).stdout
         with tarfile.open(fileobj=BytesIO(tar_bytes)) as tf:
             try:
                 tf.extractall(tmp, filter="data")
@@ -291,7 +330,12 @@ def run_compare(ref: str, design: str = "mask", cycles: int = 8_000,
     reuse those compiles). The persistent compilation cache is disabled
     for the whole compare run for the same reason. The materialized
     baseline tree under `.bench_compare/` is removed on exit unless
-    `keep_baseline`."""
+    `keep_baseline` — guaranteed even on a crash: removal is registered
+    with atexit BEFORE the baseline is materialized, so an unhandled
+    exception (or plain sys.exit) anywhere in the run still cleans up;
+    the `finally` below only makes it prompt."""
+    if not keep_baseline:
+        atexit.register(shutil.rmtree, COMPARE_DIR, ignore_errors=True)
     try:
         sha = _materialize_baseline(ref)
         jax.config.update("jax_compilation_cache_dir", None)
@@ -483,9 +527,16 @@ def main() -> None:
         ).strip()
         print(f"# re-executing with {args.devices} forced host devices",
               flush=True)
-        raise SystemExit(subprocess.call(
-            [sys.executable, "-m", "benchmarks.perf", *sys.argv[1:]],
-            env=env, cwd=REPO_ROOT))
+        try:
+            raise SystemExit(subprocess.call(
+                [sys.executable, "-m", "benchmarks.perf", *sys.argv[1:]],
+                env=env, cwd=REPO_ROOT, timeout=REEXEC_TIMEOUT_S))
+        except subprocess.TimeoutExpired:
+            # subprocess.call kills the child on expiry; surface it as
+            # the conventional timeout exit code instead of hanging CI
+            print(f"# re-executed benchmark exceeded {REEXEC_TIMEOUT_S}s "
+                  "and was killed", file=sys.stderr, flush=True)
+            raise SystemExit(124)
     if not args.no_compile_cache:
         enable_compilation_cache()
     if args.compare:

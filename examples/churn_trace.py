@@ -1,0 +1,98 @@
+"""Churn demo: segmented traces, fault injection, and an arrival-rate sweep.
+
+Production GPU sharing is time-varying — apps arrive and depart mid-run —
+while every paper figure runs a fixed mix for a fixed cycle count. This
+demo shows the robustness layer that closes that gap:
+
+1. One churn trace through `run_trace`: a seeded schedule of
+   arrivals/departures, per-segment snapshots, and the ASID-generation
+   teardown a departure performs.
+2. A deterministic fault plan (kill + TLB flush + dropped DRAM round)
+   replayed bit-for-bit, with the state auditor on.
+3. A fig20-style mini-sweep: aggregate throughput of `gpu-mmu` vs `mask`
+   as the arrival rate grows. Every (design, rate, seed) point reuses
+   the SAME compiled segment executable — schedules are data.
+
+Run:  PYTHONPATH=src python examples/churn_trace.py
+"""
+import numpy as np
+
+from repro.sim.faults import Fault, FaultPlan
+from repro.sim.runner import run_trace
+from repro.sim.workloads import churn_schedule
+
+SEG_CYCLES = 400      # one compile per design-signature at this length
+N_SEGMENTS = 6
+N_SLOTS = 2
+
+# ------------------------------------------------------- 1. a churn trace
+print("== 1. one churn trace (mask) ==")
+sched = churn_schedule(seed=3, n_segments=N_SEGMENTS, n_slots=N_SLOTS,
+                       arrival_rate=0.6, departure_rate=0.35)
+tr = run_trace("mask", sched, seg_cycles=SEG_CYCLES, return_state=True)
+for k, (seg, snap) in enumerate(zip(sched, tr.segments)):
+    slots = " + ".join(b or "idle" for b in seg)
+    print(f"segment {k}: [{slots:>12s}]  ipc={np.round(snap['ipc'], 2)}")
+print("(snapshots are cumulative since each slot's last membership "
+      "change; idle slots free-run without memory stalls — the "
+      "IPC_alone emulation — so their IPC is not contention data)")
+print("final ASID generation per slot:",
+      np.asarray(tr.final_state.asid_of_app),
+      "(slot asid % n_apps recovers the slot; departures bump the "
+      "generation — the old one is shot down everywhere)")
+
+# --------------------------------------------- 2. deterministic chaos run
+print("\n== 2. seeded fault plan, replayed bit-for-bit, audited ==")
+plan = FaultPlan(seed=17, faults=(
+    Fault("kill", 2, app=1),          # app slot 1 killed/restarted
+    Fault("tlb_flush", 3, level=1),   # shared L2 TLB flushed
+    Fault("drop_dram", 4),            # one segment loses a DRAM round
+))
+a = run_trace("mask", sched, seg_cycles=SEG_CYCLES, fault_plan=plan,
+              audit=True)             # auditor checks every snapshot
+b = run_trace("mask", sched, seg_cycles=SEG_CYCLES, fault_plan=plan)
+same = all(np.asarray(a.stats[k]).tobytes() == np.asarray(b.stats[k]).tobytes()
+           for k in a.stats)
+print(f"chaos run finished; replay bitwise-identical: {same}; "
+      f"final ipc={np.round(a.stats['ipc'], 2)} (finite, audit-clean)")
+
+# ------------------------------------- 3. arrival-rate mini-sweep (fig20)
+print("\n== 3. throughput vs arrival rate (fig20 style) ==")
+
+
+def active_throughput(schedule, trace):
+    """Instructions retired by OCCUPIED slots / total cycles.
+
+    Reconstructed from the cumulative snapshots: a slot's counters are
+    zeroed when its membership changes, so a changed slot's snapshot IS
+    its per-segment count and an unchanged slot's is a delta. Idle
+    slots are excluded — their free-running IPC_alone emulation would
+    otherwise drown the contention signal."""
+    total = 0.0
+    prev_instr = np.zeros(len(schedule[0]))
+    prev_seg = (object(),) * len(schedule[0])   # != anything
+    for seg, snap in zip(schedule, trace.segments):
+        instr = np.asarray(snap["ipc"]) * float(snap["cycles"])
+        changed = np.array([a != b for a, b in zip(seg, prev_seg)])
+        seg_instr = np.where(changed, instr, instr - prev_instr)
+        active = np.array([b is not None for b in seg])
+        total += float(seg_instr[active].sum())
+        prev_instr, prev_seg = instr, seg
+    return total / float(trace.segments[-1]["cycles"])
+
+
+RATES = (0.2, 0.5, 0.8)
+print(f"{'design':>8s} | " + " | ".join(f"rate={r:.1f}" for r in RATES))
+for design in ("gpu-mmu", "mask"):
+    row = []
+    for rate in RATES:
+        vals = []
+        for seed in (0, 1):
+            s = churn_schedule(seed=seed, n_segments=N_SEGMENTS,
+                               n_slots=N_SLOTS, arrival_rate=rate)
+            vals.append(active_throughput(s, run_trace(
+                design, s, seg_cycles=SEG_CYCLES)))
+        row.append(np.mean(vals))
+    print(f"{design:>8s} | " + " | ".join(f"{v:8.3f}" for v in row))
+print("(aggregate IPC of occupied slots; a higher arrival rate keeps "
+      "the machine fuller — more throughput, more TLB contention)")

@@ -4,7 +4,16 @@
 Usage: PYTHONPATH=src python scripts/hillclimb.py <exp> [<exp> ...]
 """
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# the dryrun lowering wants many host devices, but a user's pre-set
+# XLA_FLAGS (e.g. compiler tuning from CI or a sweep wrapper) must
+# survive: append rather than clobber, and leave an existing
+# force-host-device-count choice alone
+_FORCE = "--xla_force_host_platform_device_count"
+_flags = os.environ.get("XLA_FLAGS", "")
+if _FORCE not in _flags:
+    os.environ["XLA_FLAGS"] = (_flags + " " if _flags else "") + \
+        f"{_FORCE}=512"
 
 import dataclasses
 import json

@@ -9,9 +9,12 @@ from __future__ import annotations
 
 import dataclasses
 import os
-from typing import Optional, Tuple
+from typing import TYPE_CHECKING, Optional, Tuple
 
 from repro.core.design import Design, as_design, get_design
+
+if TYPE_CHECKING:   # sim.faults imports this module; annotation only
+    from repro.sim.faults import FaultPlan
 
 TLB_BACKENDS = ("xla", "pallas", "pallas-interpret")
 
@@ -76,6 +79,11 @@ class SimConfig:
     # fused shared-round backend: "xla" | "pallas" | "pallas-interpret";
     # None resolves from env REPRO_TLB_BACKEND (see resolve_tlb_backend)
     tlb_backend: Optional[str] = None
+    # deterministic chaos schedule for `runner.run_trace` (sim.faults).
+    # Hashable and part of the config identity, but stripped by the
+    # runner's compile-cache canonicalization: fault operands are data,
+    # so every plan shares the no-fault trace.
+    fault_plan: Optional["FaultPlan"] = None
 
     def __post_init__(self):
         if not 1 <= self.n_apps <= self.n_cores:

@@ -1,0 +1,251 @@
+"""Deterministic fault injection for chaos-testing the simulator.
+
+A `FaultPlan` is a declarative, hashable list of `Fault`s, each pinned to
+a segment boundary of a `runner.run_trace` schedule. Before a segment
+runs, the runner applies every fault scheduled at that boundary:
+
+  kill          -- kill + restart the target app slot: a full membership
+                   change (fresh ASID generation, TLB shootdown, cold
+                   warps/stats — `memsys.apply_membership_change`).
+  tlb_flush     -- spurious full flush of one translation cache level
+                   (0 = per-core L1 bank, 1 = shared L2 TLB, 2 = bypass
+                   cache): models an over-broad shootdown.
+  tlb_corrupt   -- overwrite one seeded (set, way) of the shared L2 TLB
+                   with a seeded translation for a LIVE ASID: a wrong-
+                   but-plausible entry (spurious hits, lost victim). The
+                   write dedups any existing same-(vpn, asid) entry in
+                   the set first, so state invariants (audit) still hold.
+  drop_dram     -- drop the standing DRAM backlog and close all open
+                   rows: a lost/reset memory round.
+  walk_clobber  -- occupy one seeded walk-table row with a bogus
+                   in-flight walk for a live ASID (walker-thread leak):
+                   steals a walker slot and soaks up merges until its
+                   seeded completion time passes.
+
+Determinism: every operand (which set, which way, which vpn, completion
+delta) is derived from `FaultPlan.seed` via a counter-based scheme, so a
+plan replays bit-for-bit. The plan is carried on `SimConfig.fault_plan`
+but stripped by the runner's compile-cache canonicalization: operands are
+lowered to SHAPE-STABLE per-segment arrays (`plan_operands`) fed to one
+compiled segment executable as data — every plan (including no plan,
+`empty_operands`) shares a single trace, and all-False masks are the
+bitwise identity on the state.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.sim import memsys
+from repro.sim.config import SimConfig
+
+FAULT_KINDS = ("kill", "tlb_flush", "tlb_corrupt", "drop_dram",
+               "walk_clobber")
+FLUSH_LEVELS = ("l1", "l2tlb", "bypass")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One declarative fault: `kind` applied before segment `segment` runs.
+
+    `app` targets a slot for "kill" (and seeds the live-ASID choice for
+    "tlb_corrupt" / "walk_clobber"); `level` picks the cache for
+    "tlb_flush" (index into FLUSH_LEVELS).
+    """
+    kind: str
+    segment: int
+    app: int = 0
+    level: int = 1
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"fault kind must be one of {FAULT_KINDS}, got {self.kind!r}")
+        if self.segment < 0:
+            raise ValueError(f"fault segment must be >= 0, got {self.segment}")
+        if not 0 <= self.level < len(FLUSH_LEVELS):
+            raise ValueError(
+                f"fault level must index {FLUSH_LEVELS}, got {self.level}")
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """A deterministic, replayable chaos schedule (hashable: keys nothing
+    in the compile cache — see `runner._canonical` — but rides on
+    `SimConfig` so a chaos run's config fully describes it)."""
+    seed: int = 0
+    faults: Tuple[Fault, ...] = ()
+
+    def __post_init__(self):
+        object.__setattr__(self, "faults", tuple(self.faults))
+
+    def validate(self, n_apps: int, n_segments: int) -> None:
+        for f in self.faults:
+            if f.segment >= n_segments:
+                raise ValueError(
+                    f"fault {f} targets segment {f.segment} but the "
+                    f"schedule has only {n_segments} segments")
+            if f.kind == "kill" and not 0 <= f.app < n_apps:
+                raise ValueError(
+                    f"fault {f} kills app slot {f.app}, outside "
+                    f"[0, {n_apps})")
+
+
+def random_plan(seed: int, n_segments: int, n_apps: int,
+                rate: float = 0.5) -> FaultPlan:
+    """Seeded random chaos plan: each boundary draws a fault with
+    probability `rate` (boundary 0 is spared — a fault before any cycle
+    ran is a no-op for most kinds)."""
+    rng = np.random.default_rng(seed)
+    faults = []
+    for s in range(1, n_segments):
+        if rng.random() >= rate:
+            continue
+        kind = FAULT_KINDS[int(rng.integers(len(FAULT_KINDS)))]
+        faults.append(Fault(kind=kind, segment=s,
+                            app=int(rng.integers(n_apps)),
+                            level=int(rng.integers(len(FLUSH_LEVELS)))))
+    return FaultPlan(seed=seed, faults=tuple(faults))
+
+
+class FaultOps(NamedTuple):
+    """Per-segment fault operands, all arrays with leading axis
+    (n_segments,) — pure data, one shape for every plan."""
+    kill: np.ndarray          # (S, n_apps) bool
+    flush: np.ndarray         # (S, 3) bool, FLUSH_LEVELS order
+    corrupt: np.ndarray       # (S,) bool
+    corrupt_set: np.ndarray   # (S,) int32
+    corrupt_way: np.ndarray   # (S,) int32
+    corrupt_vpn: np.ndarray   # (S,) int32
+    corrupt_app: np.ndarray   # (S,) int32 slot whose LIVE asid is written
+    drop_dram: np.ndarray     # (S,) bool
+    clobber: np.ndarray       # (S,) bool
+    clobber_row: np.ndarray   # (S,) int32
+    clobber_vpn: np.ndarray   # (S,) int32
+    clobber_app: np.ndarray   # (S,) int32
+    clobber_delta: np.ndarray # (S,) int32 cycles until the bogus walk ends
+
+
+def empty_operands(cfg: SimConfig, n_segments: int) -> FaultOps:
+    """The no-fault operand set: all masks False (bitwise identity)."""
+    S = n_segments
+    z = np.zeros(S, np.int32)
+    return FaultOps(
+        kill=np.zeros((S, cfg.n_apps), bool),
+        flush=np.zeros((S, len(FLUSH_LEVELS)), bool),
+        corrupt=np.zeros(S, bool), corrupt_set=z, corrupt_way=z,
+        corrupt_vpn=z, corrupt_app=z,
+        drop_dram=np.zeros(S, bool),
+        clobber=np.zeros(S, bool), clobber_row=z, clobber_vpn=z,
+        clobber_app=z, clobber_delta=z)
+
+
+def plan_operands(plan: FaultPlan, cfg: SimConfig,
+                  n_segments: int) -> FaultOps:
+    """Lower a declarative plan to per-segment operand arrays.
+
+    Operand draws come from one generator seeded by `plan.seed`, consumed
+    in fault-list order — same plan, same operands, bit for bit.
+    """
+    plan.validate(cfg.n_apps, n_segments)
+    ops = empty_operands(cfg, n_segments)
+    rng = np.random.default_rng(plan.seed)
+    tr = cfg.design.translation
+    l2_sets = max(tr.l2_entries // max(tr.l2_ways, 1), 1)
+    for f in plan.faults:
+        s = f.segment
+        if f.kind == "kill":
+            ops.kill[s, f.app] = True
+        elif f.kind == "tlb_flush":
+            ops.flush[s, f.level] = True
+        elif f.kind == "tlb_corrupt":
+            ops.corrupt[s] = True
+            ops.corrupt_set[s] = rng.integers(l2_sets)
+            ops.corrupt_way[s] = rng.integers(max(tr.l2_ways, 1))
+            ops.corrupt_vpn[s] = rng.integers(1 << 20)
+            ops.corrupt_app[s] = f.app % cfg.n_apps
+        elif f.kind == "drop_dram":
+            ops.drop_dram[s] = True
+        elif f.kind == "walk_clobber":
+            ops.clobber[s] = True
+            ops.clobber_row[s] = rng.integers(
+                tr.max_concurrent_walks)
+            ops.clobber_vpn[s] = rng.integers(1 << 20)
+            ops.clobber_app[s] = f.app % cfg.n_apps
+            ops.clobber_delta[s] = int(rng.integers(100, 2000))
+    return ops
+
+
+def _full_flush(st, on):
+    """Flush every entry of a TLBState when `on` (traced bool scalar)."""
+    return st._replace(
+        tags=jnp.where(on, jnp.full_like(st.tags, -1), st.tags),
+        asids=jnp.where(on, jnp.full_like(st.asids, -1), st.asids))
+
+
+def apply_state_faults(cfg: SimConfig, state: "memsys.SimState",
+                       ops: FaultOps) -> "memsys.SimState":
+    """Apply one boundary's non-kill faults to the carried state.
+
+    `ops` is a `FaultOps` sliced at a single segment (leading axis
+    removed). Kill faults are NOT handled here — the runner merges
+    `ops.kill` into the membership-change mask so kills share
+    `memsys.apply_membership_change`'s full teardown path. Every write is
+    mask-gated (`jnp.where` / out-of-bounds drop scatter): all-False
+    operands return `state` bitwise unchanged, which keeps every plan —
+    and no plan at all — on one compiled trace.
+    """
+    trans = state.trans
+    trans = trans._replace(
+        l1=_full_flush(trans.l1, ops.flush[0]),
+        l2tlb=_full_flush(trans.l2tlb, ops.flush[1]),
+        bypass_tlb=_full_flush(trans.bypass_tlb, ops.flush[2]))
+
+    # tlb_corrupt: seeded overwrite of one shared-L2-TLB entry with a
+    # plausible translation for a live ASID. First drop any existing
+    # same-(vpn, asid) entry in the set (no duplicate-entry invariant
+    # violation), then scatter the corrupt entry; inactive boundaries
+    # route the write out of bounds.
+    l2 = trans.l2tlb
+    n_sets, n_ways = l2.tags.shape
+    c_on = ops.corrupt
+    c_set = jnp.where(c_on, ops.corrupt_set % n_sets, n_sets)
+    c_asid = state.asid_of_app[ops.corrupt_app % cfg.n_apps]
+    row_dup = (l2.tags[c_set % n_sets] == ops.corrupt_vpn) & \
+        (l2.asids[c_set % n_sets] == c_asid) & c_on
+    tags = l2.tags.at[c_set % n_sets].set(
+        jnp.where(row_dup, -1, l2.tags[c_set % n_sets]))
+    asids = l2.asids.at[c_set % n_sets].set(
+        jnp.where(row_dup, -1, l2.asids[c_set % n_sets]))
+    tags = tags.at[c_set, ops.corrupt_way % n_ways].set(
+        ops.corrupt_vpn, mode="drop")
+    asids = asids.at[c_set, ops.corrupt_way % n_ways].set(
+        c_asid, mode="drop")
+    lru = l2.lru.at[c_set, ops.corrupt_way % n_ways].set(
+        state.t, mode="drop")
+    trans = trans._replace(l2tlb=l2._replace(tags=tags, asids=asids,
+                                             lru=lru))
+
+    # walk_clobber: occupy one walk-table row with a bogus live-ASID walk
+    wt = trans.walk.shape[0]
+    k_on = ops.clobber
+    k_row = jnp.where(k_on, ops.clobber_row % wt, wt)
+    k_asid = state.asid_of_app[ops.clobber_app % cfg.n_apps]
+    bogus = jnp.stack([ops.clobber_vpn, k_asid,
+                       state.t + ops.clobber_delta,
+                       jnp.ones((), jnp.int32)]).astype(jnp.int32)
+    walk = trans.walk.at[k_row].set(bogus, mode="drop")
+    trans = trans._replace(walk=walk)
+
+    dram = state.data.dram
+    dram = dram._replace(
+        open_row=jnp.where(ops.drop_dram,
+                           jnp.full_like(dram.open_row, -1), dram.open_row),
+        queue_len=jnp.where(ops.drop_dram,
+                            jnp.zeros_like(dram.queue_len), dram.queue_len))
+
+    return state._replace(trans=trans,
+                          data=state.data._replace(dram=dram))

@@ -166,6 +166,13 @@ class SimState(NamedTuple):
     data: DataState
     tokens: tok_mod.TokenState
     stats: StatState
+    # (n_apps,) int32 live ASID per application SLOT. Fixed mixes keep the
+    # identity map (asid == slot); the segmented trace runner bumps a
+    # slot's ASID by n_apps on every membership change, so an arriving
+    # app gets a FRESH address space (its translations can never alias a
+    # predecessor's) and a departed app's ASID is dead forever. Slot
+    # recovery is always `asid % n_apps`.
+    asid_of_app: jax.Array
 
 
 def init_trans(cfg: SimConfig) -> TransState:
@@ -211,6 +218,7 @@ def init_state(cfg: SimConfig, dp: DesignParams) -> SimState:
                             jnp.asarray(cfg.warps_per_app, jnp.int32),
                             dp.initial_frac),
         stats=init_stats(cfg.n_apps),
+        asid_of_app=jnp.arange(cfg.n_apps, dtype=jnp.int32),
     )
 
 
@@ -229,8 +237,14 @@ class SchedOut(NamedTuple):
     pos: jax.Array               # stream position of the picked warp
 
 
-def warp_sched(cfg: SimConfig, params_mat, stall_until, pos, t) -> SchedOut:
-    """GTO-like pick: per core, the ready warp that has waited longest."""
+def warp_sched(cfg: SimConfig, params_mat, stall_until, pos, t,
+               asid_of_app=None) -> SchedOut:
+    """GTO-like pick: per core, the ready warp that has waited longest.
+
+    `asid_of_app` is the (n_apps,) live-ASID map carried in `SimState`;
+    None means the identity map (asid == app slot), which is exactly what
+    fixed-mix runs use — the gather then returns the slot ids bit-for-bit.
+    """
     C, wpc = cfg.n_cores, cfg.warps_per_core
     ready = stall_until <= t
     waiting = jnp.where(ready, t - stall_until, -1)
@@ -242,9 +256,10 @@ def warp_sched(cfg: SimConfig, params_mat, stall_until, pos, t) -> SchedOut:
     app = jnp.asarray(cfg.app_of_core, jnp.int32)         # oracle split (§6)
     p = pos[picked_warp]
     vpn = gen_vpn(params_mat[app], app, picked_warp, p, t)
-    # one address space per application
+    # one address space per application slot occupancy (see SimState)
+    asid = app if asid_of_app is None else asid_of_app[app]
     return SchedOut(picked_warp=picked_warp, slot=pick, active=active,
-                    app=app, asid=app, vpn=vpn, pos=p)
+                    app=app, asid=asid, vpn=vpn, pos=p)
 
 
 # ---------------------------------------------------------------------------
@@ -719,9 +734,12 @@ def epoch_maintenance(cfg: SimConfig, dp: DesignParams, trans: TransState,
         warps_per_app = jnp.asarray(cfg.warps_per_app, jnp.int32)
         live = (trans.walk[:, WDONE] > t).astype(jnp.int32)
         census = jnp.stack([live, trans.walk[:, WMERGED] * live], axis=1)
+        # slot recovery: ASIDs are slot + k*n_apps after churn (see
+        # SimState.asid_of_app). Invalid rows (asid -1) land on slot
+        # n_apps-1 but carry live=0, so they contribute nothing — same
+        # sums as the pre-churn clip-to-0 routing, bit-for-bit.
         census = jax.ops.segment_sum(
-            census, jnp.clip(trans.walk[:, WASID], 0, na - 1),
-            num_segments=na)
+            census, trans.walk[:, WASID] % na, num_segments=na)
         dram = dram_sched.update_pressure(dram, census[:, 0], census[:, 1])
         return (tok_mod.epoch_update(tokens, warps_per_app,
                                      step_frac=dp.step_frac), dram,
@@ -744,7 +762,8 @@ def step(cfg: SimConfig, dp: DesignParams, params_mat,
     """One cycle. params_mat: (n_apps, N_FIELDS) int32 workload params;
     dp: the design's traced knob plane (see `repro.core.design`)."""
     t = state.t + 1
-    sched = warp_sched(cfg, params_mat, state.stall_until, state.pos, t)
+    sched = warp_sched(cfg, params_mat, state.stall_until, state.pos, t,
+                       asid_of_app=state.asid_of_app)
     trans_st, probe = translation_probe(cfg, dp, state.trans, state.tokens,
                                         sched, t)
     dfront = datapath_front(cfg, params_mat, sched, t)
@@ -766,4 +785,112 @@ def step(cfg: SimConfig, dp: DesignParams, params_mat,
                                         data_st, t)
 
     return SimState(t=t, stall_until=stall_until, instr=instr, pos=pos,
-                    trans=trans_st, data=data_st, tokens=tokens, stats=stats)
+                    trans=trans_st, data=data_st, tokens=tokens, stats=stats,
+                    asid_of_app=state.asid_of_app)
+
+
+# ---------------------------------------------------------------------------
+# app churn: membership-change teardown at a segment boundary
+# ---------------------------------------------------------------------------
+
+def _flush_slots(st: tlb_mod.TLBState, change, n_apps: int
+                 ) -> tlb_mod.TLBState:
+    """ASID shootdown for every changed SLOT of an asid-tagged cache.
+
+    Entries store generation-bumped ASIDs (slot + k*n_apps, see
+    SimState.asid_of_app), so the kill predicate recovers the slot with
+    `% n_apps`. Works on banked states too (extra leading axes). With an
+    all-False change mask this is the identity, bit for bit.
+    """
+    slot = st.asids % n_apps
+    kill = (st.asids >= 0) & change[slot]
+    return st._replace(tags=jnp.where(kill, -1, st.tags),
+                       asids=jnp.where(kill, -1, st.asids))
+
+
+def apply_membership_change(cfg: SimConfig, dp: DesignParams,
+                            state: SimState, change) -> SimState:
+    """Teardown + cold-start for the slots flagged in `change` ((n_apps,)
+    bool): the departing app's state is torn down and the slot is handed
+    to its successor with a FRESH address space.
+
+    Per paper §5.1 shootdown semantics plus the resource release MASK's
+    mechanisms need:
+
+      * L1 TLB bank / shared L2 TLB / bypass cache: every entry whose
+        ASID maps to a changed slot is invalidated (no stale translations
+        can survive — the departed generation's ASID is never reissued);
+      * PWC: tag-only (no ASID plane), so it gets a conservative FULL
+        flush whenever any slot changes — PTE lines of the dead address
+        space are unidentifiable, and a real shootdown invalidates
+        page-walk caches along with the TLBs;
+      * walk table: in-flight walks of changed slots are cancelled;
+      * tokens: changed rows release their TLB-fill tokens and restart
+        from the InitialTokens state (fresh hill-climb); the shared
+        `first_epoch` warm-up latch is deliberately left alone — it is
+        a global bypass gate and re-arming it would perturb the apps
+        that did NOT change;
+      * DRAM pressure: the changed slots' Concurrent_i / WrpStalled_i
+        inputs to the silver-quota Eq. (1) are zeroed until the next
+        epoch census; the shared queues/open rows stay (they drain on
+        their own and are not address-space state);
+      * warps of changed slots rewind to a cold stream (pos 0, no
+        retired instructions, ready immediately);
+      * stat planes of changed slots reset — the arriving app starts
+        with clean counters (the L2 data cache and the shared scalar
+        counters are NOT per-address-space state and are untouched).
+
+    Everything is a `jnp.where` on the change mask (plus one `change.any()`
+    select for the PWC), so an all-False mask returns `state` bitwise
+    unchanged — which is what makes constant-membership segmented runs
+    float-hex identical to monolithic ones.
+    """
+    na = cfg.n_apps
+    change = jnp.asarray(change, bool)
+    any_c = change.any()
+
+    trans = state.trans
+    pwc = trans.pwc._replace(
+        tags=jnp.where(any_c, jnp.full_like(trans.pwc.tags, -1),
+                       trans.pwc.tags))
+    walk_slot = trans.walk[:, WASID] % na
+    walk_kill = (trans.walk[:, WASID] >= 0) & change[walk_slot]
+    empty_row = jnp.asarray([-1, -1, 0, 0], jnp.int32)
+    walk = jnp.where(walk_kill[:, None], empty_row[None, :], trans.walk)
+    trans = trans._replace(
+        l1=_flush_slots(trans.l1, change, na),
+        l2tlb=_flush_slots(trans.l2tlb, change, na),
+        bypass_tlb=_flush_slots(trans.bypass_tlb, change, na),
+        pwc=pwc, walk=walk)
+
+    fresh_tok = tok_mod.init(na, jnp.asarray(cfg.warps_per_app, jnp.int32),
+                             dp.initial_frac)
+    tok = state.tokens
+    tok = tok._replace(
+        tokens=jnp.where(change, fresh_tok.tokens, tok.tokens),
+        direction=jnp.where(change, fresh_tok.direction, tok.direction),
+        prev_miss_rate=jnp.where(change, fresh_tok.prev_miss_rate,
+                                 tok.prev_miss_rate),
+        epoch_hits=jnp.where(change, 0, tok.epoch_hits),
+        epoch_misses=jnp.where(change, 0, tok.epoch_misses))
+
+    dram = state.data.dram
+    dram = dram._replace(
+        conc_walks=jnp.where(change, 0, dram.conc_walks),
+        warps_stalled=jnp.where(change, 0, dram.warps_stalled))
+
+    warp_change = change[jnp.repeat(
+        jnp.asarray(cfg.app_of_core, jnp.int32), cfg.warps_per_core)]
+    stall_until = jnp.where(warp_change, state.t, state.stall_until)
+    instr = jnp.where(warp_change, 0.0, state.instr)
+    pos = jnp.where(warp_change, 0, state.pos)
+
+    stats = state.stats._replace(
+        ints=jnp.where(change[:, None], 0, state.stats.ints),
+        floats=jnp.where(change[:, None], 0.0, state.stats.floats))
+
+    return state._replace(
+        stall_until=stall_until, instr=instr, pos=pos, trans=trans,
+        data=state.data._replace(dram=dram), tokens=tok, stats=stats,
+        asid_of_app=jnp.where(change, state.asid_of_app + na,
+                              state.asid_of_app))

@@ -28,6 +28,7 @@ from __future__ import annotations
 
 import dataclasses
 import functools
+import os
 from typing import Dict, List, Mapping, NamedTuple, Optional, Sequence, \
     Tuple, Union
 
@@ -37,8 +38,10 @@ import numpy as np
 
 from repro.core.design import (Design, as_design, canonical_design,
                                design_params, static_signature)
+from repro.sim import faults as faults_mod
 from repro.sim.config import SimConfig
-from repro.sim.memsys import SimState, init_state, step
+from repro.sim.memsys import (SimState, apply_membership_change, init_state,
+                              step)
 from repro.sim.workloads import app_matrix
 
 jax.config.update("jax_enable_x64", False)
@@ -53,9 +56,13 @@ TRACE_COUNT = 0
 
 def _canonical(cfg: SimConfig) -> SimConfig:
     """Replace the embedded design by its signature group's canonical
-    representative: the compile-cache key for everything below."""
+    representative: the compile-cache key for everything below. The
+    fault plan is stripped too — fault operands are shape-stable data
+    (`sim.faults`), so every chaos plan (and no plan) shares the one
+    compiled trace of its signature group."""
     return dataclasses.replace(
-        cfg, design=canonical_design(static_signature(cfg.design)))
+        cfg, design=canonical_design(static_signature(cfg.design)),
+        fault_plan=None)
 
 
 def _run_fn(cfg: SimConfig):
@@ -96,6 +103,34 @@ def _compiled_grid_run(ccfg: SimConfig):
     return jax.jit(jax.vmap(_run_fn(ccfg), in_axes=(0, 0)))
 
 
+@functools.lru_cache(maxsize=64)
+def _compiled_seg_run(ccfg: SimConfig):
+    """One compiled SEGMENT executable per (signature, n_apps,
+    seg_cycles): membership-change teardown + boundary faults + a
+    seg_cycles scan, carrying `SimState` in and out.
+
+    Everything that varies across a trace — the segment's workload rows,
+    the change mask, the fault operands, K itself — is data, so a whole
+    churn schedule (and every schedule of the same shape) replays through
+    this one trace. With an all-False change mask and empty fault
+    operands the boundary ops are bitwise identity, which is what makes
+    constant-membership segmented runs float-hex equal to the monolithic
+    scan."""
+    def seg(dp, params_mat, state, change, fops: faults_mod.FaultOps):
+        global TRACE_COUNT
+        TRACE_COUNT += 1              # runs at trace time only
+        st = apply_membership_change(ccfg, dp, state, change | fops.kill)
+        st = faults_mod.apply_state_faults(ccfg, st, fops)
+
+        def body(s, _):
+            return step(ccfg, dp, params_mat, s), None
+
+        final, _ = jax.lax.scan(body, st, None, length=ccfg.sim_cycles)
+        return final
+
+    return jax.jit(seg)
+
+
 @functools.lru_cache(maxsize=128)
 def _compiled_run(cfg: SimConfig):
     """Back-compat pm-only callable for one design; shares the signature
@@ -112,13 +147,45 @@ def _compiled_batch_run(cfg: SimConfig):
                              design_params(cfg.design))
 
 
-def _stats(cfg: SimConfig, st: SimState) -> Dict[str, np.ndarray]:
+class ZeroCycleError(RuntimeError):
+    """A stats request for a run that simulated no cycles (IPC undefined)."""
+
+
+class NonFiniteStatsError(RuntimeError):
+    """Per-app counters came back NaN/inf — corrupt state, not a metric."""
+
+
+def _audit_enabled(audit: Optional[bool]) -> bool:
+    """None defers to env REPRO_AUDIT; True/False force it on/off."""
+    if audit is not None:
+        return audit
+    return os.environ.get("REPRO_AUDIT", "") in ("1", "true", "yes")
+
+
+def _stats(cfg: SimConfig, st: SimState,
+           audit: Optional[bool] = None) -> Dict[str, np.ndarray]:
     # one bulk transfer for the whole state tree (no-op on numpy trees,
     # e.g. the per-mix slices run_batch hands over)
     st = jax.device_get(st)
+    if _audit_enabled(audit):
+        from repro.sim.audit import check_state
+        check_state(cfg, st)
     na = cfg.n_apps
     warp_app = np.repeat(np.asarray(cfg.app_of_core), cfg.warps_per_core)
-    ipc = np.bincount(warp_app, weights=st.instr, minlength=na) / float(st.t)
+    t = float(st.t)
+    if not t > 0:
+        raise ZeroCycleError(
+            f"cannot derive per-app IPC from a {t:.0f}-cycle run "
+            f"(design={cfg.design.name!r}): IPC = instructions / cycles "
+            "would be NaN/inf and silently poison weighted_speedup / "
+            "unfairness downstream — run with cycles >= 1")
+    ipc = np.bincount(warp_app, weights=st.instr, minlength=na) / t
+    if not np.all(np.isfinite(ipc)):
+        raise NonFiniteStatsError(
+            f"non-finite per-app IPC {ipc} after {t:.0f} cycles "
+            f"(design={cfg.design.name!r}): the retired-instruction "
+            "counters are corrupt (overflow or injected fault); refusing "
+            "to propagate NaN into weighted_speedup / unfairness")
     s = st.stats
     g = lambda x: np.asarray(x, np.float64)  # noqa: E731
     l1p = g(s.s_l1_hit) + g(s.s_l1_miss)
@@ -206,6 +273,96 @@ def run_mix(design: DesignLike, benches: Sequence[Optional[str]],
     return _stats(cfg, st)
 
 
+@dataclasses.dataclass(frozen=True, eq=False)
+class TraceResult:
+    """A segmented churn run: final stats + per-boundary snapshots.
+
+    `stats` is the run_mix-shaped dict of the FINAL state — for a
+    constant-membership schedule it is float-hex identical to
+    `run_mix(design, schedule[0], cycles=K * seg_cycles)`. `segments[k]`
+    is the cumulative stats snapshot after segment k. Counters of a slot
+    reset when its membership changes (the arriving app starts cold), so
+    a churned slot's numbers read "since its last arrival"; `ipc` always
+    divides by the TOTAL elapsed cycles.
+    """
+    design: Design
+    schedule: Tuple[Tuple[Optional[str], ...], ...]
+    seg_cycles: int
+    stats: Mapping[str, np.ndarray]
+    segments: Tuple[Mapping[str, np.ndarray], ...]
+    final_state: Optional[SimState] = None
+
+    def __getitem__(self, key: str):
+        return self.stats[key]
+
+
+def run_trace(design: DesignLike,
+              schedule: Sequence[Tuple[Optional[str], ...]],
+              seg_cycles: int = 2_000,
+              fault_plan: Optional[faults_mod.FaultPlan] = None,
+              audit: Optional[bool] = None,
+              collect_segments: bool = True,
+              return_state: bool = False) -> TraceResult:
+    """Run a time-varying mix: one membership tuple per segment.
+
+    `schedule[k]` is the bench tuple live during segment k (None entries
+    are idle slots); all tuples must share one length (the slot count is
+    an array shape). Between segments, every slot whose entry CHANGED
+    gets full teardown + cold-start semantics — ASID shootdown across
+    the TLB hierarchy, walk cancellation, token/DRAM-pressure release,
+    fresh ASID generation, cold warps and counters
+    (`memsys.apply_membership_change`) — and the boundary's faults from
+    `fault_plan` (plus the fault plan's kills) are applied
+    (`sim.faults`). Membership, `AppParams` rows, change masks, and
+    fault operands are all DATA: the whole trace replays through one
+    compiled segment executable per (signature, n_apps, seg_cycles) —
+    K, the schedule, and the plan never retrace.
+
+    `audit`: None defers to env `REPRO_AUDIT` (the state auditor runs on
+    every collected snapshot, `sim.audit`); True/False force it.
+    `collect_segments=False` skips intermediate snapshots (one
+    device->host transfer instead of K). `return_state` attaches the
+    final device `SimState` for state-level inspection in tests.
+    """
+    schedule = [tuple(s) for s in schedule]
+    if not schedule:
+        raise ValueError("schedule needs at least one segment")
+    sizes = {len(s) for s in schedule}
+    if len(sizes) != 1:
+        raise ValueError(
+            f"all schedule segments must have the same slot count "
+            f"(it is an array shape), got {sizes}")
+    if seg_cycles < 1:
+        raise ValueError(f"seg_cycles must be >= 1, got {seg_cycles}")
+    n = sizes.pop()
+    K = len(schedule)
+    cfg = SimConfig(n_apps=n, sim_cycles=seg_cycles,
+                    design=as_design(design), fault_plan=fault_plan)
+    ccfg = _canonical(cfg)
+    dp = design_params(cfg.design)
+    ops = (faults_mod.plan_operands(fault_plan, cfg, K) if fault_plan
+           else faults_mod.empty_operands(cfg, K))
+    seg_run = _compiled_seg_run(ccfg)
+
+    state = init_state(ccfg, dp)
+    snaps: List[Dict] = []
+    prev: Optional[Tuple[Optional[str], ...]] = None
+    for k, benches in enumerate(schedule):
+        pm = jnp.asarray(_mix_matrix(benches))
+        # segment 0's membership is the cold init itself: no teardown
+        change = np.zeros(n, bool) if prev is None else np.array(
+            [a != b for a, b in zip(prev, benches)])
+        fops = jax.tree_util.tree_map(lambda x, k=k: x[k], ops)
+        state = seg_run(dp, pm, state, jnp.asarray(change), fops)
+        if collect_segments or k == K - 1:
+            snaps.append(_stats(cfg, state, audit=audit))
+        prev = benches
+    return TraceResult(
+        design=cfg.design, schedule=tuple(schedule), seg_cycles=seg_cycles,
+        stats=snaps[-1], segments=tuple(snaps) if collect_segments else (),
+        final_state=state if return_state else None)
+
+
 def run_batch(design: DesignLike,
               bench_mixes: Sequence[Tuple[Optional[str], ...]],
               cycles: int = 60_000) -> List[Dict]:
@@ -227,11 +384,37 @@ def run_batch(design: DesignLike,
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class FailureRecord:
+    """A sweep cell (or whole signature-group chunk) that failed.
+
+    Fail-soft sweeps return these IN PLACE of stats/results instead of
+    aborting the remaining groups: one poisoned design point costs its
+    own group, not the grid. The record carries everything needed to
+    reproduce the failure standalone."""
+    designs: Tuple[str, ...]      # design names sharing the failed call
+    n_apps: int
+    cycles: int
+    error_type: str               # exception class name
+    message: str
+    stage: str                    # e.g. "grid-chunk", "experiment-batch"
+
+    def __bool__(self) -> bool:   # a failed cell is falsy; stats are truthy
+        return False
+
+    def reraise(self) -> None:
+        raise RuntimeError(
+            f"[{self.stage}] designs={self.designs} n_apps={self.n_apps} "
+            f"cycles={self.cycles}: {self.error_type}: {self.message}")
+
+
 def run_grid(designs: Sequence[DesignLike],
              bench_mixes: Sequence[Tuple[Optional[str], ...]],
              cycles: int = 60_000,
              max_rows: int = 64,
-             devices: Optional[int] = None) -> List[List[Dict]]:
+             devices: Optional[int] = None,
+             fail_soft: bool = False
+             ) -> List[List[Union[Dict, "FailureRecord"]]]:
     """Run the full designs x mixes cross product, one compile per
     static-signature group and as few device executions as `max_rows`
     allows.
@@ -256,6 +439,12 @@ def run_grid(designs: Sequence[DesignLike],
     `max_rows * devices` so each device still sees at most `max_rows`.
     Returns `stats[d][m]` aligned with the inputs — bit-for-bit equal to
     `run_mix(designs[d], bench_mixes[m], cycles)`.
+
+    `fail_soft=True` catches a failing chunk (trace/compile error,
+    execution error, or corrupt stats) into a `FailureRecord` placed in
+    every cell the chunk covered, and CONTINUES with the remaining
+    chunks and signature groups — one poisoned design cannot abort the
+    sweep. Default False preserves raise-on-first-error semantics.
     """
     ds = [as_design(d) for d in designs]
     sizes = {len(m) for m in bench_mixes}
@@ -284,26 +473,39 @@ def run_grid(designs: Sequence[DesignLike],
             w for w in range(1, designs_per_call + 1) if G % w == 0)
         for lo in range(0, G, width):
             idxs = g_idxs[lo:lo + width]
-            dps = [design_params(ds[i]) for i in idxs]
-            # rows are design-major: row g*M + m = (design idxs[g], mix m)
-            dp_stack = jax.tree_util.tree_map(
-                lambda *leaves: jnp.repeat(jnp.stack(leaves), M, axis=0),
-                *dps)
-            pm_stack = jnp.asarray(np.tile(pms, (len(idxs), 1, 1)))
-            if sharding is not None:
-                (dp_stack, pm_stack), _ = _pad_rows((dp_stack, pm_stack),
-                                                    devices)
-                dp_stack, pm_stack = jax.device_put((dp_stack, pm_stack),
-                                                    sharding)
-            # one bulk device->host transfer of the chunk's final state
-            # (padding rows ride along; the loop below never reads them)
-            final = jax.device_get(
-                _compiled_grid_run(ccfg)(dp_stack, pm_stack))
-            for g, di in enumerate(idxs):
-                for m in range(M):
-                    sub = jax.tree_util.tree_map(
-                        lambda x, r=g * M + m: x[r], final)
-                    out[di][m] = _stats(ccfg, sub)
+            try:
+                dps = [design_params(ds[i]) for i in idxs]
+                # rows are design-major: row g*M + m = (design idxs[g],
+                # mix m)
+                dp_stack = jax.tree_util.tree_map(
+                    lambda *leaves: jnp.repeat(jnp.stack(leaves), M, axis=0),
+                    *dps)
+                pm_stack = jnp.asarray(np.tile(pms, (len(idxs), 1, 1)))
+                if sharding is not None:
+                    (dp_stack, pm_stack), _ = _pad_rows(
+                        (dp_stack, pm_stack), devices)
+                    dp_stack, pm_stack = jax.device_put(
+                        (dp_stack, pm_stack), sharding)
+                # one bulk device->host transfer of the chunk's final
+                # state (padding rows ride along; the loop below never
+                # reads them)
+                final = jax.device_get(
+                    _compiled_grid_run(ccfg)(dp_stack, pm_stack))
+                for g, di in enumerate(idxs):
+                    for m in range(M):
+                        sub = jax.tree_util.tree_map(
+                            lambda x, r=g * M + m: x[r], final)
+                        out[di][m] = _stats(ccfg, sub)
+            except Exception as e:  # noqa: BLE001 — fail-soft boundary
+                if not fail_soft:
+                    raise
+                rec = FailureRecord(
+                    designs=tuple(ds[i].name for i in idxs), n_apps=n,
+                    cycles=cycles, error_type=type(e).__name__,
+                    message=str(e), stage="grid-chunk")
+                for di in idxs:
+                    for m in range(M):
+                        out[di][m] = rec
     return out
 
 
@@ -552,11 +754,25 @@ class Experiment:
         object.__setattr__(self, "design", as_design(self.design))
         object.__setattr__(self, "mixes", _normalize_mixes(self.mixes))
 
-    def run(self, solo_baselines: bool = True) -> ExperimentResult:
+    def run(self, solo_baselines: bool = True, fail_soft: bool = False
+            ) -> Union[ExperimentResult, FailureRecord]:
+        """`fail_soft=True` converts a failure (compile, execution, or
+        corrupt stats) into this experiment's `FailureRecord` instead of
+        raising, so sweep loops over many experiments keep going."""
         plans = _mix_plan(self.mixes, solo_baselines)
         # one executable per (signature, n_apps): mixes + solos per batch
-        stats_by_n = {n: run_batch(self.design, plan.rows, self.cycles)
-                      for n, plan in plans.items()}
+        stats_by_n = {}
+        for n, plan in plans.items():
+            try:
+                stats_by_n[n] = run_batch(self.design, plan.rows,
+                                          self.cycles)
+            except Exception as e:  # noqa: BLE001 — fail-soft boundary
+                if not fail_soft:
+                    raise
+                return FailureRecord(
+                    designs=(self.design.name,), n_apps=n,
+                    cycles=self.cycles, error_type=type(e).__name__,
+                    message=str(e), stage="experiment-batch")
         return _assemble_result(self.design, self.cycles, len(self.mixes),
                                 plans, stats_by_n)
 
@@ -565,7 +781,9 @@ def sweep(designs: Sequence[DesignLike],
           mixes: Sequence, cycles: int = 60_000,
           solo_baselines: bool = True,
           grid: bool = True,
-          devices: Optional[int] = None) -> Dict[str, ExperimentResult]:
+          devices: Optional[int] = None,
+          fail_soft: bool = False
+          ) -> Dict[str, Union[ExperimentResult, FailureRecord]]:
     """Run several designs over the same mixes, keyed by design name.
 
     With `grid=True` (default) the designs are grouped by static
@@ -578,7 +796,13 @@ def sweep(designs: Sequence[DesignLike],
     either way (pinned by tests).
 
     `devices=N` shards the grid rows over N devices (see `run_grid`);
-    it requires the grid path."""
+    it requires the grid path.
+
+    `fail_soft=True`: a failing signature group (or per-design
+    experiment with `grid=False`) becomes a `FailureRecord` VALUE for
+    each affected design name, and every other design's
+    `ExperimentResult` is still computed and returned — one poisoned
+    design point costs its group, not the sweep."""
     ds: List[Design] = []
     for d in designs:
         dd = as_design(d)
@@ -590,11 +814,18 @@ def sweep(designs: Sequence[DesignLike],
             raise ValueError("devices > 1 requires the grid path "
                              "(sweep(grid=True))")
         return {d.name: Experiment(d, tuple(mixes), cycles).run(
-            solo_baselines=solo_baselines) for d in ds}
+            solo_baselines=solo_baselines, fail_soft=fail_soft)
+            for d in ds}
     norm = _normalize_mixes(mixes)
     plans = _mix_plan(norm, solo_baselines)
-    stats = {n: run_grid(ds, plan.rows, cycles, devices=devices)
+    stats = {n: run_grid(ds, plan.rows, cycles, devices=devices,
+                         fail_soft=fail_soft)
              for n, plan in plans.items()}        # stats[n][design][row]
-    return {d.name: _assemble_result(
-        d, cycles, len(norm), plans, {n: stats[n][i] for n in plans})
-        for i, d in enumerate(ds)}
+    out: Dict[str, Union[ExperimentResult, FailureRecord]] = {}
+    for i, d in enumerate(ds):
+        rows_by_n = {n: stats[n][i] for n in plans}
+        failed = [s for rows in rows_by_n.values() for s in rows
+                  if isinstance(s, FailureRecord)]
+        out[d.name] = failed[0] if failed else _assemble_result(
+            d, cycles, len(norm), plans, rows_by_n)
+    return out

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-from typing import Dict, List, Tuple
+from typing import Dict, List, Optional, Tuple
 
 import jax.numpy as jnp
 import numpy as np
@@ -216,3 +216,39 @@ def pair_workloads(seed: int = 7, n_pairs: int = 35) -> List[Tuple[str, str]]:
 def hmr_class(mix: Tuple[str, ...]) -> int:
     """0..len(mix) HMR: count of high-L1,high-L2 apps in the bundle."""
     return sum(1 for b in mix if CATEGORY[b] == ("high", "high"))
+
+
+def churn_schedule(seed: int = 0, n_segments: int = 8, n_slots: int = 2,
+                   arrival_rate: float = 0.4, departure_rate: float = 0.25,
+                   benches: Optional[List[str]] = None
+                   ) -> List[Tuple[Optional[str], ...]]:
+    """Seeded time-varying membership for `runner.run_trace`.
+
+    Returns one bench tuple per segment (None = empty slot). Per
+    boundary, each occupied slot departs with `departure_rate` and each
+    empty slot admits a random app with `arrival_rate` — a discrete
+    birth-death process over the slot array, the thesis's (arXiv
+    1803.06958) time-varying sharing shape. A departure immediately
+    followed by an arrival in the same slot is a slot hand-off: the
+    runner tears the predecessor down and starts the successor on a
+    fresh ASID generation. Deterministic in `seed`.
+    """
+    if n_segments < 1 or n_slots < 1:
+        raise ValueError("need n_segments >= 1 and n_slots >= 1")
+    rng = np.random.RandomState(seed)
+    pool = list(benches) if benches is not None else [
+        b for b in BENCHES if CATEGORY[b] != ("low", "low")]
+    cur: List[Optional[str]] = [None] * n_slots
+    # start half-occupied (at least one app, so segment 0 is never fully
+    # idle) — the ramp-up to steady-state occupancy is part of the churn
+    for s in rng.choice(n_slots, size=max(n_slots // 2, 1), replace=False):
+        cur[s] = str(rng.choice(pool))
+    out = [tuple(cur)]
+    for _ in range(n_segments - 1):
+        for s in range(n_slots):
+            if cur[s] is not None and rng.rand() < departure_rate:
+                cur[s] = None
+            if cur[s] is None and rng.rand() < arrival_rate:
+                cur[s] = str(rng.choice(pool))
+        out.append(tuple(cur))
+    return out

@@ -1,0 +1,83 @@
+"""Fail-soft sweeps + the stats NaN guard.
+
+One deliberately-poisoned design point (l2_ways=0 -> ZeroDivisionError
+at trace time, its own signature group) must cost exactly its own group:
+every other design still returns a full ExperimentResult, and the poison
+maps to a structured FailureRecord. Without fail_soft, behavior stays
+raise-on-first-error. The `_stats` guard turns would-be NaN IPC into a
+descriptive error instead of silently poisoning weighted_speedup.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.design import get_design
+from repro.sim.runner import (Experiment, ExperimentResult, FailureRecord,
+                              ZeroCycleError, run_grid, run_mix, sweep)
+
+MIXES = [("3DS", "BLK"), ("MUM", "RED")]
+
+
+def _poison():
+    mask = get_design("mask")
+    return dataclasses.replace(
+        mask, name="poison",
+        translation=dataclasses.replace(mask.translation, l2_ways=0))
+
+
+def test_grid_sweep_completes_around_poisoned_design():
+    out = sweep(["gpu-mmu", "mask", _poison()], MIXES, cycles=250,
+                fail_soft=True)
+    assert isinstance(out["gpu-mmu"], ExperimentResult)
+    assert isinstance(out["mask"], ExperimentResult)
+    rec = out["poison"]
+    assert isinstance(rec, FailureRecord)
+    assert rec.error_type == "ZeroDivisionError"
+    assert rec.designs == ("poison",) and rec.n_apps == 2
+    assert not rec and out["mask"]       # records are falsy, results truthy
+    with pytest.raises(RuntimeError, match="poison"):
+        rec.reraise()
+    # healthy results are intact (not perturbed by the failure path)
+    assert out["mask"].mean_weighted_speedup() > 0
+
+
+def test_fail_soft_default_still_raises():
+    with pytest.raises(ZeroDivisionError):
+        sweep(["gpu-mmu", _poison()], MIXES, cycles=250)
+    with pytest.raises(ZeroDivisionError):
+        run_grid([_poison()], MIXES, cycles=250)
+
+
+def test_run_grid_fail_soft_cells():
+    out = run_grid(["mask", _poison()], MIXES, cycles=250, fail_soft=True)
+    assert all(isinstance(c, dict) for c in out[0])
+    assert all(isinstance(c, FailureRecord) for c in out[1])
+    assert out[1][0].stage == "grid-chunk"
+    assert np.isfinite(out[0][0]["ipc"]).all()
+
+
+def test_experiment_fail_soft():
+    exp = Experiment(_poison(), MIXES, cycles=250)
+    with pytest.raises(ZeroDivisionError):
+        exp.run()
+    rec = exp.run(fail_soft=True)
+    assert isinstance(rec, FailureRecord)
+    assert rec.stage == "experiment-batch"
+    # per-design loop path of sweep uses the same boundary
+    out = sweep(["mask", _poison()], MIXES, cycles=250, grid=False,
+                fail_soft=True)
+    assert isinstance(out["mask"], ExperimentResult)
+    assert isinstance(out["poison"], FailureRecord)
+
+
+def test_zero_cycle_stats_guard():
+    with pytest.raises(ZeroCycleError, match="IPC"):
+        run_mix("gpu-mmu", ["3DS", "BLK"], cycles=0)
+
+
+def test_zero_cycle_run_is_fail_soft_catchable():
+    out = sweep(["gpu-mmu"], MIXES, cycles=0, fail_soft=True)
+    rec = out["gpu-mmu"]
+    assert isinstance(rec, FailureRecord)
+    assert rec.error_type == "ZeroCycleError"

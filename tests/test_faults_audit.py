@@ -1,0 +1,195 @@
+"""Fault injection (sim.faults) + state auditor (sim.audit).
+
+Chaos runs must be deterministic (same plan, same bits), must always
+complete with finite stats and an audit-clean state, and must not
+fragment the compile cache (fault operands are data). The auditor must
+pass on healthy states and fail loudly — naming the invariant — on
+injected corruptions.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.sim import runner
+from repro.sim.audit import AuditError, check_monotone, check_state
+from repro.sim.config import SimConfig
+from repro.sim.faults import (FAULT_KINDS, Fault, FaultPlan, plan_operands,
+                              random_plan)
+from repro.sim.runner import run_trace
+
+MIX = ("3DS", "BLK")
+SCHED = [MIX, ("3DS", None), ("SC", "MUM"), ("SC", "MUM")]
+
+ALL_KINDS_PLAN = FaultPlan(seed=11, faults=(
+    Fault("kill", 1, app=0),
+    Fault("tlb_flush", 2, level=1),
+    Fault("tlb_corrupt", 2, app=1),
+    Fault("drop_dram", 3),
+    Fault("walk_clobber", 3, app=0),
+))
+
+
+def _final_state(schedule=None, **kw):
+    tr = run_trace("mask", schedule or [MIX, MIX], seg_cycles=250,
+                   return_state=True, collect_segments=False, **kw)
+    # np.array copies: device_get views can be read-only, and the audit
+    # tests mutate the state in place to inject corruption
+    st = jax.tree_util.tree_map(np.array, jax.device_get(tr.final_state))
+    return tr, st
+
+
+def test_fault_plan_replay_is_bitwise():
+    a = run_trace("mask", SCHED, seg_cycles=250, fault_plan=ALL_KINDS_PLAN)
+    b = run_trace("mask", SCHED, seg_cycles=250, fault_plan=ALL_KINDS_PLAN)
+    for k in a.stats:
+        assert np.asarray(a.stats[k]).tobytes() == \
+            np.asarray(b.stats[k]).tobytes(), k
+
+
+@pytest.mark.parametrize("seed", [1, 2, 3])
+def test_fault_runs_finish_finite_and_audit_clean(seed):
+    plan = random_plan(seed, len(SCHED), 2)
+    tr = run_trace("mask", SCHED, seg_cycles=250, fault_plan=plan,
+                   audit=True)   # auditor runs on every snapshot
+    for s in tr.segments:
+        assert np.isfinite(s["ipc"]).all()
+    assert np.isfinite(tr.stats["ipc"]).all()
+
+
+def test_every_fault_kind_is_exercised_and_audit_clean():
+    kinds = {f.kind for f in ALL_KINDS_PLAN.faults}
+    assert kinds == set(FAULT_KINDS)
+    tr = run_trace("mask", SCHED, seg_cycles=250,
+                   fault_plan=ALL_KINDS_PLAN, audit=True)
+    assert np.isfinite(tr.stats["ipc"]).all()
+
+
+def test_fault_plan_does_not_fragment_compile_cache():
+    seg = 190   # unique seg_cycles: this test owns its cache entry
+    t0 = runner.TRACE_COUNT
+    run_trace("mask", [MIX, MIX], seg_cycles=seg)
+    traced = runner.TRACE_COUNT - t0
+    assert traced == 1
+    plan = FaultPlan(seed=5, faults=(Fault("tlb_flush", 1),))
+    run_trace("mask", [MIX, MIX], seg_cycles=seg, fault_plan=plan)
+    assert runner.TRACE_COUNT - t0 == traced, \
+        "a fault plan must ride the no-fault trace (operands are data)"
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError, match="kind"):
+        Fault("meteor-strike", 0)
+    with pytest.raises(ValueError, match="segment"):
+        Fault("kill", -1)
+    plan = FaultPlan(seed=0, faults=(Fault("kill", 9, app=0),))
+    with pytest.raises(ValueError, match="only 2 segments"):
+        run_trace("mask", [MIX, MIX], seg_cycles=100, fault_plan=plan)
+    cfg = SimConfig(n_apps=2)
+    with pytest.raises(ValueError, match="kills app slot"):
+        plan_operands(FaultPlan(0, (Fault("kill", 0, app=7),)), cfg, 2)
+
+
+def test_operand_lowering_is_deterministic():
+    cfg = SimConfig(n_apps=2)
+    a = plan_operands(ALL_KINDS_PLAN, cfg, len(SCHED))
+    b = plan_operands(ALL_KINDS_PLAN, cfg, len(SCHED))
+    for x, y in zip(a, b):
+        assert np.array_equal(x, y)
+    assert a.kill[1, 0] and a.flush[2, 1] and a.corrupt[2]
+    assert a.drop_dram[3] and a.clobber[3]
+
+
+# ------------------------------------------------------------------ audit
+
+def test_audit_passes_on_healthy_states():
+    tr, st = _final_state(SCHED)
+    cfg = SimConfig(n_apps=2, sim_cycles=250, design=tr.design)
+    check_state(cfg, st)   # must not raise
+
+
+def _cfg_for(tr):
+    return SimConfig(n_apps=2, sim_cycles=250, design=tr.design)
+
+
+def test_audit_catches_stale_asid():
+    tr, st = _final_state()
+    st.trans.l2tlb.tags[0, 0] = 777
+    st.trans.l2tlb.asids[0, 0] = 9   # not a live generation of any slot
+    with pytest.raises(AuditError, match="stale translation"):
+        check_state(_cfg_for(tr), st)
+
+
+def test_audit_catches_duplicate_entries():
+    tr, st = _final_state()
+    for w in (0, 1):
+        st.trans.l2tlb.tags[3, w] = 555
+        st.trans.l2tlb.asids[3, w] = 0
+    with pytest.raises(AuditError, match="duplicate"):
+        check_state(_cfg_for(tr), st)
+
+
+def test_audit_catches_tag_asid_disagreement():
+    tr, st = _final_state()
+    st.trans.l1.tags[2, 0, 0] = 42      # valid tag...
+    st.trans.l1.asids[2, 0, 0] = -1     # ...without an owner
+    with pytest.raises(AuditError, match="validity disagree"):
+        check_state(_cfg_for(tr), st)
+
+
+def test_audit_catches_token_and_counter_corruption():
+    tr, st = _final_state()
+    st.tokens.tokens[0] = 0
+    st.stats.ints[1, 2] = -5
+    with pytest.raises(AuditError) as ei:
+        check_state(_cfg_for(tr), st)
+    msg = str(ei.value)
+    assert "tokens outside" in msg and "int counters negative" in msg
+    assert len(ei.value.violations) == 2   # collected, not first-only
+
+
+def test_audit_catches_future_lru_and_dead_walk():
+    tr, st = _final_state()
+    st.trans.l2tlb.lru[1, 1] = int(st.t) + 999
+    st.trans.walk[0] = (123, 9, int(st.t) + 50, 1)  # in-flight, dead asid
+    with pytest.raises(AuditError) as ei:
+        check_state(_cfg_for(tr), st)
+    msg = str(ei.value)
+    assert "LRU stamp" in msg and "dead ASID" in msg
+
+
+def test_audit_monotone():
+    tr1, s1 = _final_state([MIX])
+    tr2, s2 = _final_state([MIX, MIX])
+    check_monotone(s1, s2)                      # must not raise
+    with pytest.raises(AuditError, match="decreased|backwards"):
+        check_monotone(s2, s1)
+    # a changed slot may reset its counters without tripping the law
+    ch = np.array([False, True])
+    s2.stats.ints[1, :] = 0
+    check_monotone(s1, s2, changed=ch)
+    with pytest.raises(AuditError, match="decreased"):
+        check_monotone(s1, s2, changed=np.array([False, False]))
+
+
+def test_stats_env_gating(monkeypatch):
+    tr, st = _final_state()
+    st.trans.l2tlb.tags[0, 0] = 777
+    st.trans.l2tlb.asids[0, 0] = 9
+    cfg = _cfg_for(tr)
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    with pytest.raises(AuditError):
+        runner._stats(cfg, st)
+    monkeypatch.setenv("REPRO_AUDIT", "0")
+    runner._stats(cfg, st)              # gating off: stats still compute
+    monkeypatch.setenv("REPRO_AUDIT", "1")
+    runner._stats(cfg, st, audit=False)  # explicit False beats the env
+
+
+def test_fault_plan_on_simconfig_is_hashable_and_canonical_strips_it():
+    cfg = SimConfig(n_apps=2, fault_plan=ALL_KINDS_PLAN)
+    hash(cfg)               # frozen + hashable (keys nothing, but must not raise)
+    assert runner._canonical(cfg).fault_plan is None
+    assert runner._canonical(cfg) == runner._canonical(
+        dataclasses.replace(cfg, fault_plan=None))

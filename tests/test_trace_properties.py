@@ -1,0 +1,57 @@
+"""Hypothesis properties for the churn runner and fault layer.
+
+Skips itself when `hypothesis` is absent (same policy as
+test_core_tlb_properties.py). All draws reuse one compiled segment
+executable — shapes are fixed — so examples are cheap after the first.
+"""
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.sim.faults import random_plan  # noqa: E402
+from repro.sim.runner import run_mix, run_trace  # noqa: E402
+from repro.sim.workloads import churn_schedule  # noqa: E402
+
+SEG = 160          # fixed shapes: every example shares the compile
+K = 4
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1))
+def test_property_chaos_runs_always_finish_finite(seed):
+    """Any seeded churn schedule + any seeded fault plan completes with
+    finite stats and an audit-clean state at every boundary."""
+    sched = churn_schedule(seed=seed, n_segments=K, n_slots=2)
+    plan = random_plan(seed, K, 2, rate=0.8)
+    tr = run_trace("mask", sched, seg_cycles=SEG, fault_plan=plan,
+                   audit=True)
+    for snap in tr.segments:
+        assert np.isfinite(snap["ipc"]).all()
+        assert float(snap["cycles"]) > 0
+
+
+@settings(max_examples=4, deadline=None)
+@given(st.sampled_from(["mask", "gpu-mmu", "static", "ideal"]),
+       st.sampled_from([("3DS", "BLK"), ("MUM", "RED")]))
+def test_property_constant_membership_is_bitwise(design, mix):
+    """Segmenting never changes the answer when membership is constant."""
+    mono = run_mix(design, list(mix), cycles=K * SEG)
+    tr = run_trace(design, [mix] * K, seg_cycles=SEG)
+    for k in mono:
+        assert np.asarray(mono[k]).tobytes() == \
+            np.asarray(tr.stats[k]).tobytes(), k
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(1, 10), st.integers(1, 4))
+def test_property_churn_schedule_wellformed(seed, n_segments, n_slots):
+    sched = churn_schedule(seed=seed, n_segments=n_segments,
+                           n_slots=n_slots)
+    assert len(sched) == n_segments
+    assert all(len(s) == n_slots for s in sched)
+    assert sched == churn_schedule(seed=seed, n_segments=n_segments,
+                                   n_slots=n_slots)
+    assert any(b is not None for b in sched[0])

@@ -1,0 +1,127 @@
+"""Segmented churn runner: bitwise equivalence + teardown semantics.
+
+The acceptance gates for `runner.run_trace`:
+
+  * a K-segment run with CONSTANT membership is float-hex identical to
+    the monolithic `run_mix` of the same total cycle count — across all
+    8 builtin designs and n_apps in {2, 3}, and across different segment
+    splits of the same run;
+  * a mid-trace departure performs a real ASID shootdown: no translation
+    for the departed generation survives anywhere in the hierarchy, and
+    the slot's successor runs on a FRESH address-space generation;
+  * the whole schedule (membership, change masks, fault operands, K) is
+    data — different schedules of the same shape share one compiled
+    segment executable.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.design import BUILTIN_DESIGNS
+from repro.sim import runner
+from repro.sim.runner import run_mix, run_trace
+from repro.sim.workloads import BENCHES, CATEGORY, churn_schedule
+
+MIX2 = ("3DS", "BLK")
+MIX3 = ("3DS", "BLK", "MUM")
+
+
+def _hex(stats) -> dict:
+    """Bit-exact representation of a stats dict (float-hex-equivalent)."""
+    return {k: np.asarray(v).tobytes() for k, v in sorted(stats.items())}
+
+
+@pytest.mark.parametrize("mix", [MIX2, MIX3], ids=["2app", "3app"])
+@pytest.mark.parametrize("design", [d.name for d in BUILTIN_DESIGNS])
+def test_constant_membership_segments_bitwise(design, mix):
+    K, seg = 3, 150
+    mono = run_mix(design, list(mix), cycles=K * seg)
+    tr = run_trace(design, [mix] * K, seg_cycles=seg)
+    assert _hex(mono) == _hex(tr.stats)
+
+
+def test_segment_split_invariance():
+    """Different K-splits of the same total are all bitwise equal."""
+    total = 360
+    mono = run_mix("mask", list(MIX2), cycles=total)
+    for k in (2, 4):
+        tr = run_trace("mask", [MIX2] * k, seg_cycles=total // k)
+        assert _hex(mono) == _hex(tr.stats), f"K={k}"
+
+
+def test_per_segment_snapshots():
+    tr = run_trace("mask", [MIX2] * 3, seg_cycles=150)
+    assert len(tr.segments) == 3
+    assert [s["cycles"] for s in tr.segments] == [150.0, 300.0, 450.0]
+    assert _hex(tr.segments[-1]) == _hex(tr.stats)
+    lean = run_trace("mask", [MIX2] * 3, seg_cycles=150,
+                     collect_segments=False)
+    assert lean.segments == () and _hex(lean.stats) == _hex(tr.stats)
+
+
+def test_departure_triggers_asid_shootdown():
+    """After a slot departs, NO translation of the departed generation
+    survives in the L1 bank, shared L2 TLB, bypass cache, or the walk
+    table — and the successor occupies a fresh generation."""
+    tr = run_trace("mask",
+                   [("3DS", "BLK"), ("3DS", None), ("3DS", "MUM")],
+                   seg_cycles=300, return_state=True)
+    st = jax.device_get(tr.final_state)
+    # slot 1: gen 0 (BLK, asid 1) -> gen 1 (idle, asid 3) -> gen 2 (MUM,
+    # asid 5); slot 0 never changed (asid 0)
+    assert st.asid_of_app.tolist() == [0, 5]
+    dead = (1, 3)
+    for name in ("l1", "l2tlb", "bypass_tlb"):
+        tlb = getattr(st.trans, name)
+        stale = np.isin(np.asarray(tlb.asids), dead) & \
+            (np.asarray(tlb.tags) >= 0)
+        assert not stale.any(), f"stale {name} translations for dead ASIDs"
+    assert not np.isin(np.asarray(st.trans.walk)[:, 1], dead).any(), \
+        "walk table still references a departed ASID"
+    # the survivor and the arrival both made progress
+    assert tr.stats["ipc"][0] > 0 and np.isfinite(tr.stats["ipc"]).all()
+
+
+def test_arrival_into_idle_slot_runs_cold():
+    """None -> bench arrival: the slot starts cold (fresh generation)
+    but executes; bench -> same bench across a boundary is NOT a change
+    (bitwise-identical to no boundary at all)."""
+    tr = run_trace("gpu-mmu", [("3DS", None), ("3DS", "BLK")],
+                   seg_cycles=300, return_state=True)
+    st = jax.device_get(tr.final_state)
+    assert st.asid_of_app.tolist() == [0, 3]
+    assert tr.stats["ipc"][1] > 0
+
+
+def test_schedules_share_one_compiled_executable():
+    # unique seg_cycles so this test owns its compile-cache entry
+    seg = 170
+    t0 = runner.TRACE_COUNT
+    run_trace("mask", [MIX2, MIX2, ("3DS", None)], seg_cycles=seg)
+    after_first = runner.TRACE_COUNT
+    # different membership timeline, different K: same executable
+    run_trace("mask", [("MUM", "RED")] * 5, seg_cycles=seg)
+    run_trace("mask-tlb", [MIX2, ("BLK", "3DS")], seg_cycles=seg)
+    assert after_first - t0 == 1
+    assert runner.TRACE_COUNT == after_first, \
+        "a schedule/design in the same signature group retraced"
+
+
+def test_schedule_validation():
+    with pytest.raises(ValueError, match="at least one segment"):
+        run_trace("mask", [])
+    with pytest.raises(ValueError, match="same slot count"):
+        run_trace("mask", [("3DS", "BLK"), ("3DS",)])
+    with pytest.raises(ValueError, match="seg_cycles"):
+        run_trace("mask", [MIX2], seg_cycles=0)
+
+
+def test_churn_schedule_generator():
+    a = churn_schedule(seed=9, n_segments=6, n_slots=3)
+    b = churn_schedule(seed=9, n_segments=6, n_slots=3)
+    assert a == b, "churn_schedule must be deterministic in seed"
+    assert len(a) == 6 and all(len(s) == 3 for s in a)
+    assert any(x is not None for x in a[0]), "segment 0 never fully idle"
+    pool = {x for x in BENCHES if CATEGORY[x] != ("low", "low")}
+    assert {x for s in a for x in s if x is not None} <= pool
+    assert a != churn_schedule(seed=10, n_segments=6, n_slots=3)
