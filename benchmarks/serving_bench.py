@@ -1,0 +1,182 @@
+"""Serving fairness benchmark -> BENCH_serving.json.
+
+Drives seeded trace presets (repro.serving.stream) through the
+multi-tenant engine under each placement policy and reports the
+paper's fairness metrics at the serving layer:
+
+  per-tenant slowdown  — shared mean latency / solo mean latency, the
+                         solo run replaying the SAME seeded arrivals
+                         restricted to that tenant (TraceSpec.only) —
+                         the serving analogue of IPC_alone (paper §6)
+  unfairness           — max per-tenant slowdown
+  fairness error       — |predicted - achieved| / achieved, where the
+                         prediction is the contention oracle's mean
+                         predicted max-slowdown over its chosen
+                         placements (only the "oracle" policy predicts)
+
+plus TTFT, latency percentiles, SLO attainment (SLO = 3x the tenant's
+solo mean latency) and per-tenant throughput. Token compute is stubbed
+(`ServingEngine(forwards=stub_forwards())`): latencies are measured in
+ENGINE STEPS, so the benchmark isolates scheduling/admission behavior
+— which is what the policies differ on — and stays fast enough for CI.
+
+The headline check (also asserted by tests/test_serving_oracle.py):
+on flood_vs_trickle the oracle policy must STRICTLY improve
+unfairness over the admit-all "none" baseline.
+
+Run:   PYTHONPATH=src python benchmarks/serving_bench.py
+Smoke: PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.memmgr import kv_cache as kvc                      # noqa: E402
+from repro.serving import metrics as smet                     # noqa: E402
+from repro.serving import stream as strm                      # noqa: E402
+from repro.serving.engine import (EngineConfig, ServingEngine,  # noqa: E402
+                                  stub_forwards, stub_model_config)
+from repro.serving.oracle import ContentionOracle             # noqa: E402
+from repro.serving.placement import POLICIES, make_policy     # noqa: E402
+
+POOL = kvc.PoolConfig(n_pages=256, page_size=8, n_kv=1, head_dim=4,
+                      n_layers=1, max_seqs=16, pages_per_seq=8)
+
+
+def run_trace(trace: strm.TraceSpec, policy, max_batch: int = 8,
+              drain_steps: int = 800):
+    cfg = stub_model_config()
+    eng = ServingEngine(cfg, None, None, POOL,
+                        EngineConfig(max_batch=max_batch),
+                        placement=policy, profiles=trace.profiles(),
+                        forwards=stub_forwards())
+    for step_reqs in strm.arrivals(trace, cfg.vocab_size):
+        for r in step_reqs:
+            eng.submit(r)
+        eng.step()
+    eng.run_until_drained(max_steps=drain_steps)
+    return eng
+
+
+def bench_trace(trace: strm.TraceSpec, policies, cycles: int,
+                epoch_steps: int, unfairness_cap: float):
+    # solo baselines: same seeded arrivals, one tenant at a time
+    solo_lat = {}
+    for spec in trace.specs:
+        e = run_trace(trace.only(spec.tenant), make_policy("none"))
+        solo_lat.update(smet.tenant_mean_latency(e.finished))
+    out = {"steps": trace.steps, "seed": trace.seed,
+           "tenants": {s.tenant: s.profile for s in trace.specs},
+           "solo_mean_latency": {t: round(v, 3)
+                                 for t, v in sorted(solo_lat.items())},
+           "policies": {}}
+    for pol in policies:
+        oracle = None
+        if pol == "oracle":
+            oracle = ContentionOracle(cycles=cycles,
+                                      slots=max(len(trace.specs), 2),
+                                      pad_rows=8)
+        policy = make_policy(pol, profiles=trace.profiles(), oracle=oracle,
+                             epoch_steps=epoch_steps,
+                             **({"unfairness_cap": unfairness_cap}
+                                if pol == "oracle" else {}))
+        eng = run_trace(trace, policy)
+        rep = smet.fairness_report(eng.finished, solo_lat, eng.decisions)
+        slo = {t: 3.0 * solo_lat[t] for t in solo_lat}
+        rec = {
+            "finished": len(eng.finished),
+            "engine_steps": eng.step_count,
+            "tenant_slowdown": {t: round(v, 4)
+                                for t, v in rep["tenant_slowdown"].items()},
+            "unfairness": round(rep["unfairness"], 4),
+            "predicted_max_slowdown": rep["predicted_max_slowdown"],
+            "fairness_error": rep["fairness_error"],
+            "starved_tenants": rep["starved_tenants"],
+            "tenant_mean_latency": {
+                t: round(v, 3)
+                for t, v in sorted(smet.tenant_mean_latency(
+                    eng.finished).items())},
+            "tenant_ttft": {t: round(v, 3)
+                            for t, v in sorted(smet.tenant_ttft(
+                                eng.finished).items())},
+            "latency_percentiles": smet.latency_percentiles(eng.finished),
+            "slo_attainment": {
+                t: round(sum(1 for r in eng.finished if r.tenant == t
+                             and r.finish_step - r.submit_step <= slo[t])
+                         / max(sum(1 for r in eng.finished
+                                   if r.tenant == t), 1), 4)
+                for t in sorted(solo_lat)},
+            "tenant_throughput": {
+                t: round(v, 4)
+                for t, v in sorted(smet.tenant_throughput(
+                    eng.finished, eng.step_count).items())},
+            "decisions": smet.decision_summary(eng.decisions),
+        }
+        if oracle is not None:
+            rec["oracle"] = {"grid_calls": oracle.grid_calls,
+                             "memo_size": oracle.memo_size,
+                             "sim_failures": len(oracle.failures)}
+        out["policies"][pol] = rec
+        print(f"  {trace.name:<18} {pol:<7} unfair "
+              f"{rec['unfairness']:<7} slowdown "
+              f"{rec['tenant_slowdown']}", flush=True)
+    return out
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_serving.json"))
+    ap.add_argument("--traces", nargs="*",
+                    default=["flood_vs_trickle", "churn", "heavy_tail"])
+    ap.add_argument("--policies", nargs="*", default=list(POLICIES))
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--steps", type=int, default=None,
+                    help="override every trace's step count")
+    ap.add_argument("--cycles", type=int, default=600,
+                    help="simulator cycles per oracle prediction")
+    ap.add_argument("--epoch-steps", type=int, default=8)
+    ap.add_argument("--unfairness-cap", type=float, default=1.15)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI mode: one trace, short, fewer sim cycles")
+    args = ap.parse_args()
+    if args.smoke:
+        args.traces = ["flood_vs_trickle"]
+        args.cycles = min(args.cycles, 300)
+
+    results = {"seed": args.seed, "cycles": args.cycles,
+               "epoch_steps": args.epoch_steps,
+               "unfairness_cap": args.unfairness_cap,
+               "policies": list(args.policies), "traces": {}}
+    for name in args.traces:
+        trace = strm.make_trace(name, seed=args.seed, steps=args.steps)
+        print(f"{name} (steps={trace.steps}, seed={trace.seed}):",
+              flush=True)
+        results["traces"][name] = bench_trace(
+            trace, args.policies, args.cycles, args.epoch_steps,
+            args.unfairness_cap)
+
+    checks = {}
+    fv = results["traces"].get("flood_vs_trickle", {}).get("policies", {})
+    if "oracle" in fv and "none" in fv:
+        checks["oracle_beats_none_flood_vs_trickle"] = bool(
+            fv["oracle"]["unfairness"] < fv["none"]["unfairness"])
+    results["checks"] = checks
+
+    with open(args.out, "w") as f:
+        json.dump(results, f, indent=1, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {os.path.abspath(args.out)}")
+    for k, v in checks.items():
+        print(f"check {k}: {'PASS' if v else 'FAIL'}")
+    if checks and not all(checks.values()):
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,11 +1,20 @@
 """Serving launcher: multi-tenant continuous batching on the reduced config.
 
+Ad-hoc requests (legacy mode):
+
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b --tenants 2 \
       --requests 8
+
+Trace-driven with a placement policy (serving.stream presets; the
+"oracle" policy consults the simulator-backed contention oracle):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+      --trace flood_vs_trickle --steps 24 --policy oracle
 """
 from __future__ import annotations
 
 import argparse
+from typing import Mapping, Optional
 
 import jax
 import numpy as np
@@ -15,10 +24,19 @@ from repro.configs.base import RunConfig, ShapeConfig
 from repro.memmgr.kv_cache import PoolConfig
 from repro.models import model as M
 from repro.serving import metrics as smet
+from repro.serving import stream as strm
 from repro.serving.engine import EngineConfig, Request, ServingEngine
+from repro.serving.placement import POLICIES, make_policy
 
 
-def build_engine(arch: str, max_seqs: int = 16):
+def build_engine(arch: str, max_seqs: int = 16, policy: str = "none",
+                 profiles: Optional[Mapping[int, str]] = None,
+                 epoch_steps: int = 8, ecfg: Optional[EngineConfig] = None,
+                 **policy_kw) -> ServingEngine:
+    """Engine on the reduced model. `policy`/`profiles` select the
+    admission placement layer (serving.placement); extra kwargs reach
+    the policy factory (e.g. cycles=..., unfairness_cap=... for
+    "oracle")."""
     cfg = reduced_model(get_model(arch))
     shape = ShapeConfig("serve", seq_len=64, global_batch=1, kind="decode")
     run = RunConfig(model=cfg, shape=shape, remat=False,
@@ -29,31 +47,72 @@ def build_engine(arch: str, max_seqs: int = 16):
         n_pages=max_seqs * 8, page_size=cfg.kv_page_size,
         n_kv=max(cfg.n_kv_heads, 1), head_dim=cfg.head_dim if cfg.n_heads else 1,
         n_layers=max(n_attn, 1), max_seqs=max_seqs, pages_per_seq=8)
-    return ServingEngine(cfg, run, params, pool)
+    placement = make_policy(policy, profiles=profiles,
+                            epoch_steps=epoch_steps, **policy_kw)
+    return ServingEngine(cfg, run, params, pool,
+                         ecfg or EngineConfig(),
+                         placement=placement, profiles=profiles)
+
+
+def run_trace(eng: ServingEngine, trace: strm.TraceSpec,
+              drain_steps: int = 400):
+    for step_reqs in strm.arrivals(trace, eng.cfg.vocab_size):
+        for r in step_reqs:
+            eng.submit(r)
+        eng.step()
+    return eng.run_until_drained(max_steps=drain_steps)
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--policy", default="none", choices=POLICIES)
+    ap.add_argument("--trace", default=None,
+                    help=f"trace preset {sorted(strm.PRESETS)}; omit for "
+                         "ad-hoc --requests mode")
+    ap.add_argument("--steps", type=int, default=24)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--epoch-steps", type=int, default=8)
+    ap.add_argument("--cycles", type=int, default=300,
+                    help="oracle: simulator cycles per prediction")
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 
-    eng = build_engine(args.arch)
-    rng = np.random.RandomState(0)
-    for i in range(args.requests):
-        eng.submit(Request(
-            rid=i, tenant=i % args.tenants,
-            prompt=rng.randint(0, eng.cfg.vocab_size, args.prompt_len),
-            max_new=args.max_new))
-    finished = eng.run_until_drained()
+    if args.trace:
+        trace = strm.make_trace(args.trace, seed=args.seed,
+                                steps=args.steps)
+        kw = {"cycles": args.cycles} if args.policy == "oracle" else {}
+        eng = build_engine(args.arch, policy=args.policy,
+                           profiles=trace.profiles(),
+                           epoch_steps=args.epoch_steps, **kw)
+        finished = run_trace(eng, trace)
+    else:
+        eng = build_engine(args.arch, policy=args.policy,
+                           profiles={t: "batch"
+                                     for t in range(args.tenants)})
+        rng = np.random.RandomState(args.seed)
+        for i in range(args.requests):
+            eng.submit(Request(
+                rid=i, tenant=i % args.tenants,
+                prompt=rng.randint(0, eng.cfg.vocab_size, args.prompt_len),
+                max_new=args.max_new))
+        finished = eng.run_until_drained()
+
     tput = smet.tenant_throughput(finished, eng.step_count)
-    print(f"finished {len(finished)} requests in {eng.step_count} steps")
+    print(f"policy={args.policy}: finished {len(finished)} requests "
+          f"in {eng.step_count} steps "
+          f"({len(eng.decisions)} placement decisions)")
     for t, v in sorted(tput.items()):
         print(f"  tenant {t}: {v:.2f} tok/step")
     print(f"mean latency {smet.mean_latency(finished):.1f} steps")
+    if eng.decisions:
+        summ = smet.decision_summary(eng.decisions)
+        if summ["predicted_max_slowdown_mean"] is not None:
+            print(f"oracle predicted max slowdown (mean over epochs): "
+                  f"{summ['predicted_max_slowdown_mean']:.3f}")
 
 
 if __name__ == "__main__":

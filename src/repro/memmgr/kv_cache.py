@@ -11,10 +11,11 @@ into the serving engine (DESIGN.md §2b).
 from __future__ import annotations
 
 import dataclasses
-from typing import NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import tlb as tlb_mod
 from repro.core import tokens as tok_mod
@@ -147,3 +148,37 @@ def write_kv(cfg: PoolConfig, pool: KVPool, layer, seq_slots, k_new, v_new
 def gather_block_table(cfg: PoolConfig, pool: KVPool, seq_slots) -> jax.Array:
     """(B, pages_per_seq) physical page ids for the paged-attention kernel."""
     return jnp.maximum(pool.tables.leaf[seq_slots], 0)
+
+
+# Jitted entry points for the serving engine's per-step pool mutations.
+# Eager `lax.cond` (append_token_alloc) retraces and compiles a FRESH
+# executable on every call — thousands of engine steps then exhaust the
+# process's memory-map budget (vm.max_map_count) and crash LLVM. Static
+# cfg (PoolConfig is frozen/hashable) keys one compile per pool shape.
+admit_seq_jit = jax.jit(admit_seq, static_argnums=0)
+append_token_alloc_jit = jax.jit(append_token_alloc, static_argnums=0)
+release_seq_jit = jax.jit(release_seq, static_argnums=0)
+
+
+class PoolPressure(NamedTuple):
+    """Host-side occupancy snapshot for admission/placement decisions."""
+
+    used_frac: float                  # fraction of physical pages in use
+    free_pages: int
+    free_seqs: int                    # unoccupied sequence slots
+    pages_by_tenant: Dict[int, int]   # ASID -> pages held
+
+
+def pool_pressure(cfg: PoolConfig, pool: KVPool) -> PoolPressure:
+    """Surface KV-pool pressure to the placement layer (one small
+    device->host transfer; called once per decision epoch)."""
+    owner = np.asarray(pool.tables.owner)
+    seq_asid = np.asarray(pool.seq_asid)
+    free = int(cfg.n_pages - (owner >= 0).sum())
+    live = owner[owner >= 0]
+    by_tenant = {int(t): int((live == t).sum()) for t in np.unique(live)}
+    return PoolPressure(
+        used_frac=1.0 - free / max(cfg.n_pages, 1),
+        free_pages=free,
+        free_seqs=int((seq_asid < 0).sum()),
+        pages_by_tenant=by_tenant)

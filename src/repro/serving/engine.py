@@ -11,6 +11,13 @@ semantics transplanted to request admission, §5.4):
            in-flight sequences x queue depth).
   Normal — remaining decode slots round-robin over other tenants.
 
+Admission is additionally gated by a pluggable placement policy
+(serving.placement): once per decision epoch the policy — possibly
+consulting the simulator-backed contention oracle (serving.oracle) —
+decides which tenants may co-run and each tenant's admission cap;
+decisions are recorded on `self.decisions` for the serving benchmark's
+predicted-vs-achieved fairness accounting.
+
 Per-tenant throughput / weighted-speedup metrics mirror the paper's
 evaluation (serving.metrics).
 """
@@ -18,7 +25,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Mapping, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,6 +34,8 @@ import numpy as np
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.memmgr import kv_cache as kvc
 from repro.models import model as M
+from repro.serving.placement import (EngineView, PlacementDecision,
+                                     PlacementPolicy)
 
 
 @dataclasses.dataclass
@@ -34,11 +43,20 @@ class Request:
     rid: int
     tenant: int
     prompt: np.ndarray
-    max_new: int
+    max_new: int                 # decode steps (prefill token not counted)
     out: List[int] = dataclasses.field(default_factory=list)
     seq_slot: int = -1
     submit_step: int = 0
+    first_token_step: int = -1   # prefill emission step (TTFT anchor)
     finish_step: int = -1
+
+    @property
+    def decoded(self) -> int:
+        """Tokens produced by DECODE steps. `out` also holds the token
+        the prefill emitted, so completion/throughput accounting uses
+        this, not len(out) — a request runs exactly
+        min(max_new, decode_len_cap) decode steps."""
+        return max(len(self.out) - 1, 0)
 
 
 @dataclasses.dataclass
@@ -48,12 +66,37 @@ class EngineConfig:
     decode_len_cap: int = 256
 
 
+def stub_forwards():
+    """Canonical token-compute stubs for the `forwards` seam: constant
+    logits (argmax -> token 0), no KV tensors. Scheduling behavior —
+    admission, silver rotation, placement, completion — is identical to
+    a real model's; only the token values differ. Used by the serving
+    benchmark and the engine scheduling-law tests."""
+    def prefill(cfg, run, params, batch, max_len=None):
+        return jnp.zeros((1, batch["tokens"].shape[1], 8)), {}
+
+    def decode(cfg, run, params, batch, caches):
+        return jnp.zeros((1, 1, 8)), caches
+    return prefill, decode
+
+
+def stub_model_config(vocab_size: int = 64):
+    """Minimal cfg satisfying the engine's host-side checks (no real
+    model fields needed when `forwards` is stubbed)."""
+    import types
+    return types.SimpleNamespace(n_patches=0, is_enc_dec=False,
+                                 vocab_size=vocab_size)
+
+
 class ServingEngine:
     """CPU-scale reference engine (smoke/examples); the same scheduling laws
     drive the dry-run serve_step at production shapes."""
 
     def __init__(self, cfg: ModelConfig, run: RunConfig, params,
-                 pool_cfg: kvc.PoolConfig, ecfg: EngineConfig = EngineConfig()):
+                 pool_cfg: kvc.PoolConfig, ecfg: EngineConfig = EngineConfig(),
+                 placement: Optional[PlacementPolicy] = None,
+                 profiles: Optional[Mapping[int, str]] = None,
+                 forwards: Optional[Tuple] = None):
         self.cfg = cfg
         self.run = run
         self.params = params
@@ -66,14 +109,42 @@ class ServingEngine:
         self.step_count = 0
         self.silver_tenant = 0
         self.silver_left = 1
+        self.placement = placement if placement is not None \
+            else PlacementPolicy()
+        self.profiles: Dict[int, str] = dict(profiles or {})
+        self.decisions: List[PlacementDecision] = []
         self._free_slots = list(range(pool_cfg.max_seqs))
         self._decode = None
         self._prefill_cache: Dict[int, tuple] = {}
+        self._silver_quota_used = 0
+        # (prefill_fn, decode_fn) seam: benchmarks/tests that measure
+        # SCHEDULING (steps, not wall-clock) stub the token compute
+        self._fwd_prefill, self._fwd_decode = (
+            forwards if forwards is not None
+            else (M.forward_prefill, M.forward_decode))
 
     # ------------------------------------------------------------- API
     def submit(self, req: Request):
         req.submit_step = self.step_count
         self.queues.setdefault(req.tenant, deque()).append(req)
+
+    def _running_count(self, tenant: int) -> int:
+        return sum(1 for r in self.running if r.tenant == tenant)
+
+    def view(self) -> EngineView:
+        """Host-side snapshot the placement policy decides from."""
+        pressure = kvc.pool_pressure(self.pool_cfg, self.pool)
+        return EngineView(
+            step=self.step_count,
+            max_batch=self.ecfg.max_batch,
+            queued={t: len(q) for t, q in self.queues.items()},
+            running={t: self._running_count(t)
+                     for t in {r.tenant for r in self.running}},
+            waiting_since={t: q[0].submit_step
+                           for t, q in self.queues.items() if q},
+            pool_used_frac=pressure.used_frac,
+            pool_free_seqs=pressure.free_seqs,
+            profiles=self.profiles)
 
     def _quota(self) -> Dict[int, int]:
         """Eq. (1) analogue over tenants with queued work."""
@@ -86,7 +157,10 @@ class ServingEngine:
 
     # ------------------------------------------------------- scheduling
     def _admit(self):
-        """Golden phase: admissions + page allocation first."""
+        """Golden phase: admissions + page allocation first. The
+        placement decision gates every admission: a tenant outside the
+        epoch's allowed set, or at its admission cap, keeps queueing
+        (its running requests still decode — caps are admission-only)."""
         tenants = sorted(self.queues)
         # silver tenant first
         order = ([self.silver_tenant] +
@@ -94,10 +168,11 @@ class ServingEngine:
         for t in order:
             q = self.queues.get(t)
             while (q and len(self.running) < self.ecfg.max_batch
-                   and self._free_slots):
+                   and self._free_slots
+                   and self.placement.may_admit(t, self._running_count(t))):
                 req = q.popleft()
                 slot = self._free_slots.pop()
-                self.pool, ok = kvc.admit_seq(
+                self.pool, ok = kvc.admit_seq_jit(
                     self.pool_cfg, self.pool, jnp.int32(slot),
                     jnp.int32(t), jnp.int32(len(req.prompt)))
                 if not bool(ok):
@@ -116,23 +191,36 @@ class ServingEngine:
         if self.cfg.is_enc_dec:
             batch["frames"] = jnp.zeros(
                 (1, self.cfg.enc_len, self.cfg.d_model), jnp.bfloat16)
-        logits, caches = M.forward_prefill(
+        logits, caches = self._fwd_prefill(
             self.cfg, self.run, self.params, batch,
             max_len=self.pool_cfg.pages_per_seq * self.pool_cfg.page_size)
         tok = int(jnp.argmax(logits[0, -1]))
         req.out.append(tok)
+        req.first_token_step = self.step_count
         self._prefill_cache[req.rid] = caches
 
     def _select_decode_batch(self) -> List[Request]:
-        quota = self._quota()
+        """Silver quota first, then normal-class round over the rest.
+        Silver requests beyond the quota backfill as NORMAL class: they
+        run only when slots would otherwise go unused and do not burn
+        silver quota (`_silver_quota_used` counts only the quota-class
+        head of the batch)."""
         silver = [r for r in self.running if r.tenant == self.silver_tenant]
         others = [r for r in self.running if r.tenant != self.silver_tenant]
-        batch = silver[: max(self.silver_left, 0)] + others
-        return batch[: self.ecfg.max_batch]
+        quota_n = min(len(silver), max(self.silver_left, 0))
+        batch = (silver[:quota_n] + others + silver[quota_n:])
+        batch = batch[: self.ecfg.max_batch]
+        self._silver_quota_used = min(quota_n, len(batch))
+        return batch
 
     def step(self):
-        """One engine iteration: golden (admit/alloc) -> silver/normal decode."""
+        """One engine iteration: placement epoch -> golden (admit/alloc)
+        -> silver/normal decode."""
         self.step_count += 1
+        active = tuple(sorted({t for t, q in self.queues.items() if q}
+                              | {r.tenant for r in self.running}))
+        if self.placement.due(self.step_count) or self.placement.stale(active):
+            self.decisions.append(self.placement.refresh(self.view()))
         self._admit()
         batch = self._select_decode_batch()
         if not batch:
@@ -141,18 +229,18 @@ class ServingEngine:
         for req in batch:  # reference implementation decodes per-request
             caches = self._prefill_cache[req.rid]
             tok = jnp.asarray([[req.out[-1]]], jnp.int32)
-            logits, caches = M.forward_decode(
+            logits, caches = self._fwd_decode(
                 self.cfg, self.run, self.params, {"tokens": tok}, caches)
             self._prefill_cache[req.rid] = caches
             nxt = int(jnp.argmax(logits[0, -1]))
             req.out.append(nxt)
-            self.pool, ok = kvc.append_token_alloc(
+            self.pool, ok = kvc.append_token_alloc_jit(
                 self.pool_cfg, self.pool, jnp.int32(req.seq_slot))
-            if len(req.out) >= min(req.max_new, self.ecfg.decode_len_cap):
+            if req.decoded >= min(req.max_new, self.ecfg.decode_len_cap):
                 done.append(req)
-        # silver rotation
-        self.silver_left -= sum(1 for r in batch
-                                if r.tenant == self.silver_tenant)
+        # silver rotation: only quota-class decodes burn quota (backfilled
+        # silver requests ran as normal class)
+        self.silver_left -= self._silver_quota_used
         if self.silver_left <= 0 and self.queues:
             tenants = sorted(set(list(self.queues) +
                                  [r.tenant for r in self.running]))
@@ -164,8 +252,8 @@ class ServingEngine:
         for req in done:
             req.finish_step = self.step_count
             self.running.remove(req)
-            self.pool = kvc.release_seq(self.pool_cfg, self.pool,
-                                        jnp.int32(req.seq_slot))
+            self.pool = kvc.release_seq_jit(self.pool_cfg, self.pool,
+                                            jnp.int32(req.seq_slot))
             self._free_slots.append(req.seq_slot)
             self._prefill_cache.pop(req.rid, None)
             self.finished.append(req)

@@ -1,15 +1,34 @@
-"""Per-tenant fairness/throughput metrics (weighted speedup, max slowdown)
-— the paper's evaluation metrics applied to the serving engine."""
+"""Per-tenant serving metrics: throughput, latency distributions, TTFT,
+SLO attainment, and the paper's fairness metrics (weighted speedup, max
+slowdown) applied to the serving engine — plus the oracle's
+predicted-vs-achieved fairness error.
+
+Latency accounting is in ENGINE STEPS (submit -> finish), the serving
+analogue of the simulator's cycles: a tenant's *slowdown* is its shared
+mean latency over its solo mean latency (same seeded arrivals, engine
+to itself — `stream.TraceSpec.only`), and *unfairness* is the max
+slowdown over tenants, mirroring §6's IPC_alone construction.
+"""
 from __future__ import annotations
 
 from collections import defaultdict
-from typing import Dict, List
+from typing import Dict, Iterable, Mapping, Optional
+
+import numpy as np
+
+
+def _decoded(r) -> int:
+    """Decode-produced tokens of a finished request (the prefill-emitted
+    token in `out` is not a decode token)."""
+    d = getattr(r, "decoded", None)
+    return d if d is not None else max(len(r.out) - 1, 0)
 
 
 def tenant_throughput(finished, total_steps: int) -> Dict[int, float]:
+    """Decoded tokens per engine step, per tenant."""
     toks = defaultdict(int)
     for r in finished:
-        toks[r.tenant] += len(r.out)
+        toks[r.tenant] += _decoded(r)
     return {t: n / max(total_steps, 1) for t, n in toks.items()}
 
 
@@ -27,3 +46,119 @@ def mean_latency(finished) -> float:
     if not finished:
         return 0.0
     return sum(r.finish_step - r.submit_step for r in finished) / len(finished)
+
+
+def tenant_mean_latency(finished) -> Dict[int, float]:
+    lat = defaultdict(list)
+    for r in finished:
+        lat[r.tenant].append(r.finish_step - r.submit_step)
+    return {t: float(np.mean(v)) for t, v in lat.items()}
+
+
+def tenant_ttft(finished) -> Dict[int, float]:
+    """Mean time-to-first-token (submit -> prefill emission), per
+    tenant; requests that never prefilled are excluded."""
+    lat = defaultdict(list)
+    for r in finished:
+        if r.first_token_step >= 0:
+            lat[r.tenant].append(r.first_token_step - r.submit_step)
+    return {t: float(np.mean(v)) for t, v in lat.items()}
+
+
+def latency_percentiles(finished, ps: Iterable[int] = (50, 95, 99)
+                        ) -> Dict[str, float]:
+    """Overall completion-latency percentiles, `{"p50": ..., ...}`."""
+    if not finished:
+        return {f"p{p}": 0.0 for p in ps}
+    lat = np.asarray([r.finish_step - r.submit_step for r in finished])
+    return {f"p{p}": float(np.percentile(lat, p)) for p in ps}
+
+
+def tenant_latency_percentiles(finished, ps: Iterable[int] = (50, 95, 99)
+                               ) -> Dict[int, Dict[str, float]]:
+    by = defaultdict(list)
+    for r in finished:
+        by[r.tenant].append(r)
+    return {t: latency_percentiles(v, ps) for t, v in by.items()}
+
+
+def slo_attainment(finished, slo_steps: float) -> Dict[int, float]:
+    """Fraction of each tenant's finished requests completing within
+    `slo_steps` engine steps of submission."""
+    tot, ok = defaultdict(int), defaultdict(int)
+    for r in finished:
+        tot[r.tenant] += 1
+        if r.finish_step - r.submit_step <= slo_steps:
+            ok[r.tenant] += 1
+    return {t: ok[t] / tot[t] for t in tot}
+
+
+def tenant_slowdown(shared_lat: Mapping[int, float],
+                    solo_lat: Mapping[int, float]) -> Dict[int, float]:
+    """Per-tenant achieved slowdown: shared mean latency / solo mean
+    latency (>= ~1 when sharing hurts). Tenants missing a side are
+    skipped; a tenant starved in the shared run (no finished requests)
+    simply has no entry — report starvation separately."""
+    out = {}
+    for t, shared in shared_lat.items():
+        solo = solo_lat.get(t)
+        if solo is not None:
+            out[t] = shared / max(solo, 1e-9)
+    return out
+
+
+def unfairness(slowdowns: Mapping[int, float]) -> float:
+    """Max per-tenant slowdown (the paper's unfairness metric)."""
+    if not slowdowns:
+        return 0.0
+    return float(max(slowdowns.values()))
+
+
+def prediction_error(predicted: Optional[float],
+                     achieved: Optional[float]) -> Optional[float]:
+    """Relative predicted-vs-achieved fairness error
+    |pred - achieved| / achieved. None when either side is missing
+    (e.g. the `none` policy makes no predictions)."""
+    if predicted is None or achieved is None or achieved <= 0:
+        return None
+    return abs(predicted - achieved) / achieved
+
+
+def decision_summary(decisions) -> Dict[str, object]:
+    """Fold an engine's placement `decisions` log into benchmark-ready
+    scalars: epochs, mean/last predicted max-slowdown of the CHOSEN
+    placements, and per-policy bookkeeping."""
+    chosen = [d.chosen for d in decisions if d.chosen is not None]
+    pred = [c.max_slowdown for c in chosen]
+    allowed_sizes = [len(d.allowed) for d in decisions]
+    return {
+        "epochs": len(decisions),
+        "predicted_max_slowdown_mean": (float(np.mean(pred))
+                                        if pred else None),
+        "predicted_max_slowdown_last": (float(pred[-1]) if pred else None),
+        "predicted_weighted_speedup_mean": (
+            float(np.mean([c.weighted_speedup for c in chosen]))
+            if chosen else None),
+        "mean_allowed_tenants": (float(np.mean(allowed_sizes))
+                                 if allowed_sizes else 0.0),
+        "notes": sorted({d.note for d in decisions if d.note}),
+    }
+
+
+def fairness_report(shared_finished, solo_lat: Mapping[int, float],
+                    decisions=()) -> Dict[str, object]:
+    """One-call fairness rollup for a shared run: achieved per-tenant
+    slowdown + unfairness, and (when placement decisions carry oracle
+    predictions) the predicted-vs-achieved error."""
+    shared_lat = tenant_mean_latency(shared_finished)
+    slow = tenant_slowdown(shared_lat, solo_lat)
+    ach = unfairness(slow)
+    summ = decision_summary(decisions)
+    pred = summ["predicted_max_slowdown_mean"]
+    return {
+        "tenant_slowdown": {int(t): v for t, v in sorted(slow.items())},
+        "unfairness": ach,
+        "predicted_max_slowdown": pred,
+        "fairness_error": prediction_error(pred, ach),
+        "starved_tenants": sorted(set(solo_lat) - set(shared_lat)),
+    }

@@ -1,0 +1,137 @@
+"""Contention oracle: the memory-system simulator as an admission/
+placement advisor for the serving engine.
+
+Tenants declare an app *profile* ("interactive", "heavy", a Table 2
+bench name, ...); the oracle maps profiles to calibrated simulator
+benches (`repro.sim.profiles`) and asks the simulator how candidate
+co-placements would contend: for every candidate set of tenants it
+returns the predicted weighted speedup, max slowdown (unfairness), and
+per-tenant slowdown of co-running their benches on the shared memory
+system under the oracle's design point.
+
+Cost discipline — the oracle must be cheap enough to consult every
+decision epoch of a serving loop:
+
+* ONE `run_grid` call per epoch: all uncached candidate mixes plus the
+  solo-baseline rows their benches need batch through
+  `runner.predict_mixes` as a single vmapped grid execution.
+* ONE compiled program per signature group for the oracle's LIFETIME:
+  mixes are padded to a fixed `slots` count and the row count to a
+  fixed `pad_rows` multiple, so repeated epochs never retrace
+  (pinned via `runner.TRACE_COUNT` in tests/test_serving_oracle.py).
+* Memoized by frozen mix key: a candidate's benches, sorted, key its
+  prediction — an epoch whose candidates were all seen before costs no
+  simulation at all. Solo IPCs are cached per bench the same way.
+* Fail-soft: with `fail_soft=True` (default) a failing simulation
+  chunk poisons only its own candidates (their prediction is None and
+  the `FailureRecord` is kept on `self.failures`); the serving loop
+  keeps running on the surviving predictions.
+
+Predictions are deterministic: the simulator is seeded and
+deterministic, and candidate keys/memo insertion order are canonical.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.core.design import Design, as_design
+from repro.sim import runner as sim_runner
+from repro.sim.profiles import DEFAULT_PROFILE, bench_for_profile
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPrediction:
+    """A candidate tenant co-placement with its predicted contention."""
+
+    tenants: Tuple[int, ...]          # sorted tenant ids
+    benches: Tuple[str, ...]          # aligned with `tenants`
+    weighted_speedup: float
+    max_slowdown: float
+    slowdown: Mapping[int, float]     # per tenant
+
+    def victim(self) -> int:
+        """The tenant predicted to suffer most from this placement."""
+        return max(self.tenants, key=lambda t: (self.slowdown[t], t))
+
+
+class ContentionOracle:
+    """Maps tenant profiles to benches and batch-predicts candidate
+    placements through the simulator (see module docstring)."""
+
+    def __init__(self, design: object = "mask", cycles: int = 1_500,
+                 slots: int = 4, pad_rows: int = 16,
+                 fail_soft: bool = True):
+        self.design: Design = as_design(design)
+        self.cycles = int(cycles)
+        self.slots = int(slots)
+        self.pad_rows = int(pad_rows)
+        self.fail_soft = fail_soft
+        # frozen mix key (sorted bench tuple) -> prediction (None = failed)
+        self._memo: Dict[Tuple[str, ...],
+                         Optional[sim_runner.MixPrediction]] = {}
+        self._solo: Dict[str, float] = {}       # bench -> IPC_alone
+        self.failures: List[sim_runner.FailureRecord] = []
+        self.grid_calls = 0                     # run_grid invocations
+
+    # ------------------------------------------------------------ core
+    def predict_benches(self, bench_mixes: Sequence[Sequence[str]]
+                        ) -> List[Optional[sim_runner.MixPrediction]]:
+        """Predict raw bench mixes; memoized, one grid call for all
+        fresh keys. Returns None for mixes whose simulation failed
+        (fail-soft; the FailureRecord lands on `self.failures`)."""
+        keys = [tuple(sorted(m)) for m in bench_mixes]
+        fresh: List[Tuple[str, ...]] = []
+        for k in keys:
+            if k not in self._memo and k not in fresh:
+                fresh.append(k)
+        if fresh:
+            preds = sim_runner.predict_mixes(
+                self.design, fresh, cycles=self.cycles, slots=self.slots,
+                pad_rows=self.pad_rows, fail_soft=self.fail_soft,
+                solo_cache=self._solo)
+            self.grid_calls += 1
+            for k, p in zip(fresh, preds):
+                if isinstance(p, sim_runner.FailureRecord):
+                    self.failures.append(p)
+                    self._memo[k] = None
+                else:
+                    self._memo[k] = p
+        return [self._memo[k] for k in keys]
+
+    def predict(self, candidates: Sequence[Sequence[int]],
+                profiles: Mapping[int, str]
+                ) -> List[Optional[PlacementPrediction]]:
+        """Predict candidate tenant sets. `profiles` maps tenant id to
+        a declared app profile (missing tenants get DEFAULT_PROFILE)."""
+        cands = [tuple(sorted(c)) for c in candidates]
+        if any(len(c) > self.slots for c in cands):
+            raise ValueError(
+                f"candidate exceeds oracle slots={self.slots}: "
+                f"{max(cands, key=len)}")
+        benches = [tuple(bench_for_profile(
+            profiles.get(t, DEFAULT_PROFILE)) for t in c) for c in cands]
+        base = self.predict_benches(benches)
+        out: List[Optional[PlacementPrediction]] = []
+        for tenants, bs, p in zip(cands, benches, base):
+            if p is None:
+                out.append(None)
+                continue
+            # p.benches is the sorted key; align tenants the same way
+            # (equal benches are interchangeable slots)
+            order = sorted(zip(bs, tenants))
+            slowdown = {t: p.slowdown[i] for i, (_, t) in enumerate(order)}
+            out.append(PlacementPrediction(
+                tenants=tenants, benches=bs,
+                weighted_speedup=p.weighted_speedup,
+                max_slowdown=p.max_slowdown, slowdown=slowdown))
+        return out
+
+    # ------------------------------------------------------ inspection
+    @property
+    def memo_size(self) -> int:
+        return len(self._memo)
+
+    def solo_ipc(self) -> Dict[str, float]:
+        """Cached per-bench IPC_alone baselines (a copy)."""
+        return dict(self._solo)

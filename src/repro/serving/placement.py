@@ -1,0 +1,312 @@
+"""Admission/placement policies gating the serving engine's `_admit`.
+
+Once per *decision epoch* (every `epoch_steps` engine steps) the active
+policy looks at a host-side `EngineView` snapshot — queue depths,
+running counts, KV-pool pressure (`repro.memmgr.kv_cache.pool_pressure`)
+— and produces a `PlacementDecision`: which tenants may co-run this
+epoch (`allowed`) and each tenant's admission cap (`caps`, max running
+requests). The engine consults the current decision on every admission;
+running requests always finish out (admission gating only, so decisions
+are work-conserving for work already placed).
+
+Policies, least to most informed:
+
+  none    — admit everything (the engine's legacy behavior).
+  static  — fixed equal partition of the batch over the DECLARED tenant
+            universe, never adapted (the paper's Static baseline
+            transplanted: isolating but wasteful when tenants idle).
+  greedy  — equal share over the tenants with work right now, backing
+            off when the KV pool nears exhaustion. Adaptive but
+            contention-blind.
+  oracle  — consults the `ContentionOracle`: enumerates candidate
+            co-run sets, gets predicted weighted-speedup/unfairness
+            from the simulator, picks the best candidate whose
+            predicted max slowdown clears the unfairness cap, and
+            reserves admission slots for predicted victims so an
+            aggressor tenant cannot crowd them out of the batch.
+
+Every decision (with its predictions, for the oracle) is recorded on
+the engine's `decisions` log — the serving benchmark reports
+predicted-vs-achieved fairness from exactly these records.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Mapping, Optional, Sequence, Tuple
+
+from repro.serving.oracle import ContentionOracle, PlacementPrediction
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineView:
+    """Host-side engine snapshot a policy decides from."""
+
+    step: int
+    max_batch: int
+    queued: Mapping[int, int]          # tenant -> queued request count
+    running: Mapping[int, int]         # tenant -> running request count
+    waiting_since: Mapping[int, int]   # tenant -> oldest queued submit step
+    pool_used_frac: float              # KV pool page pressure [0, 1]
+    pool_free_seqs: int
+    profiles: Mapping[int, str]        # declared tenant profiles
+
+    @property
+    def tenants(self) -> Tuple[int, ...]:
+        """Tenants with any work (queued or running), sorted."""
+        live = {t for t, n in self.queued.items() if n > 0}
+        live |= {t for t, n in self.running.items() if n > 0}
+        return tuple(sorted(live))
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementDecision:
+    """One epoch's admission plan (+ the evidence, for the oracle)."""
+
+    step: int
+    policy: str
+    allowed: Tuple[int, ...]           # tenants that may admit this epoch
+    caps: Mapping[int, int]            # tenant -> max running requests
+    predictions: Tuple[PlacementPrediction, ...] = ()
+    chosen: Optional[PlacementPrediction] = None
+    note: str = ""
+    default_cap: int = 0               # cap for tenants NOT in `allowed`
+
+    def cap(self, tenant: int) -> int:
+        """Admission cap. Tenants outside `allowed` get `default_cap`:
+        0 freezes them out for the epoch (static partitions), 1 lets a
+        tenant that was idle at the decision boundary trickle in
+        instead of stalling a full epoch (greedy/oracle)."""
+        if tenant not in self.allowed:
+            return self.default_cap
+        return self.caps.get(tenant, 0)
+
+
+class PlacementPolicy:
+    """Base: admit-all ("none"). Subclasses override `_decide`."""
+
+    name = "none"
+
+    def __init__(self, epoch_steps: int = 16):
+        if epoch_steps < 1:
+            raise ValueError(f"epoch_steps must be >= 1, got {epoch_steps}")
+        self.epoch_steps = epoch_steps
+        self.decision: Optional[PlacementDecision] = None
+        self._last_step: Optional[int] = None
+        self._last_active: Tuple[int, ...] = ()
+
+    def due(self, step: int) -> bool:
+        return (self._last_step is None
+                or step - self._last_step >= self.epoch_steps)
+
+    def stale(self, active: Sequence[int]) -> bool:
+        """Decision invalidation on churn: a tenant that was NOT active
+        when the epoch's decision was made has work now, so the
+        placement no longer covers the live tenant set — re-decide
+        early rather than stall the newcomer a whole epoch. (Tenants
+        the decision deliberately excluded were seen at decision time
+        and do NOT retrigger; oracle memoization keeps early
+        re-decides cheap.)"""
+        if self.name == "none" or self.decision is None:
+            return False
+        return bool(set(active) - set(self._last_active))
+
+    def refresh(self, view: EngineView) -> PlacementDecision:
+        self.decision = self._decide(view)
+        self._last_step = view.step
+        self._last_active = view.tenants
+        return self.decision
+
+    def may_admit(self, tenant: int, running_count: int) -> bool:
+        """Admission gate consulted per admitted request. The base
+        policy is truly admit-all — never gated on the (stale) epoch
+        snapshot, so "none" is the engine's legacy behavior exactly."""
+        if self.name == "none" or self.decision is None:
+            return True
+        return running_count < self.decision.cap(tenant)
+
+    def _decide(self, view: EngineView) -> PlacementDecision:
+        ts = view.tenants
+        return PlacementDecision(
+            step=view.step, policy=self.name, allowed=ts,
+            caps={t: view.max_batch for t in ts},
+            default_cap=view.max_batch)
+
+
+class StaticPartition(PlacementPolicy):
+    """Fixed 1/N admission slice per DECLARED tenant — isolating but
+    non-adaptive: an idle tenant's slice is never reused."""
+
+    name = "static"
+
+    def __init__(self, tenants: Sequence[int], epoch_steps: int = 16):
+        super().__init__(epoch_steps)
+        self._universe = tuple(sorted(set(tenants)))
+        if not self._universe:
+            raise ValueError("static partition needs >= 1 declared tenant")
+
+    def stale(self, active: Sequence[int]) -> bool:
+        return False        # the partition is fixed; churn changes nothing
+
+    def _decide(self, view: EngineView) -> PlacementDecision:
+        share = max(view.max_batch // len(self._universe), 1)
+        return PlacementDecision(
+            step=view.step, policy=self.name, allowed=self._universe,
+            caps={t: share for t in self._universe})
+
+
+class GreedyShare(PlacementPolicy):
+    """Equal share over currently-active tenants + pool backpressure.
+    Adaptive (idle tenants' slots are redistributed) but blind to WHICH
+    tenants contend on the memory system."""
+
+    name = "greedy"
+
+    def __init__(self, epoch_steps: int = 16,
+                 pool_high_water: float = 0.9):
+        super().__init__(epoch_steps)
+        self.pool_high_water = pool_high_water
+
+    def _decide(self, view: EngineView) -> PlacementDecision:
+        ts = view.tenants
+        if not ts:
+            return PlacementDecision(step=view.step, policy=self.name,
+                                     allowed=(), caps={}, default_cap=1)
+        budget = view.max_batch
+        note = ""
+        if view.pool_used_frac > self.pool_high_water:
+            budget = max(budget // 2, len(ts))
+            note = f"pool pressure {view.pool_used_frac:.2f}: halved budget"
+        share = max(-(-budget // len(ts)), 1)       # ceil
+        return PlacementDecision(
+            step=view.step, policy=self.name, allowed=ts,
+            caps={t: share for t in ts}, note=note, default_cap=1)
+
+
+class OraclePlacement(PlacementPolicy):
+    """Simulator-driven placement (see module docstring).
+
+    Per epoch: enumerate co-run candidates over the (up to `slots`)
+    longest-waiting active tenants, predict each through the oracle,
+    keep candidates whose predicted max slowdown clears
+    `unfairness_cap`, and pick the one serving the most tenants at the
+    highest predicted weighted speedup. Admission caps then reserve
+    batch slots for predicted victims: every allowed tenant's cap is
+    the batch minus the other tenants' reservations (the predicted
+    worst victim reserves 2 slots, others 1), so the aggressor can
+    never occupy the whole batch while a victim queues.
+    """
+
+    name = "oracle"
+
+    def __init__(self, oracle: ContentionOracle, epoch_steps: int = 16,
+                 unfairness_cap: float = 1.15,
+                 pool_high_water: float = 0.9):
+        super().__init__(epoch_steps)
+        self.oracle = oracle
+        self.unfairness_cap = unfairness_cap
+        self.pool_high_water = pool_high_water
+
+    # ---------------------------------------------------------- decide
+    def _candidates(self, tenants: Tuple[int, ...]
+                    ) -> List[Tuple[int, ...]]:
+        """All non-empty subsets, smallest-last so ties in scoring
+        resolve toward serving more tenants; deterministic order."""
+        out: List[Tuple[int, ...]] = []
+        n = len(tenants)
+        for bits in range(1, 2 ** n):
+            out.append(tuple(t for i, t in enumerate(tenants)
+                             if bits >> i & 1))
+        return sorted(out, key=lambda c: (len(c), c))
+
+    def _decide(self, view: EngineView) -> PlacementDecision:
+        active = view.tenants
+        if not active:
+            return PlacementDecision(step=view.step, policy=self.name,
+                                     allowed=(), caps={}, default_cap=1)
+        # consider the longest-waiting tenants first when over-wide
+        consider = sorted(
+            active,
+            key=lambda t: (view.waiting_since.get(t, view.step), t)
+        )[: self.oracle.slots]
+        consider = tuple(sorted(consider))
+        cands = self._candidates(consider)
+        preds = [p for p in self.oracle.predict(cands, view.profiles)
+                 if p is not None]
+        note = ""
+        if not preds:
+            # every candidate's simulation failed: fail soft to greedy
+            share = max(-(-view.max_batch // len(active)), 1)
+            return PlacementDecision(
+                step=view.step, policy=self.name, allowed=active,
+                caps={t: share for t in active}, default_cap=1,
+                note="oracle predictions unavailable; equal share")
+        feasible = [p for p in preds
+                    if p.max_slowdown <= self.unfairness_cap]
+        if feasible:
+            # serve the most tenants at the best predicted speedup;
+            # deterministic tie-break on the tenant tuple
+            chosen = max(feasible, key=lambda p: (
+                len(p.tenants), p.weighted_speedup, p.tenants))
+        else:
+            chosen = min(preds, key=lambda p: (
+                p.max_slowdown, -len(p.tenants), p.tenants))
+            note = (f"no candidate under unfairness cap "
+                    f"{self.unfairness_cap}: min-slowdown fallback")
+        allowed = chosen.tenants
+        # Latent-tenant headroom: declared tenants (profiles) that are
+        # idle right now WILL come back; holding a slot for them means
+        # their first request admits instantly instead of waiting out a
+        # full batch of long decodes (admission caps can't evict).
+        latent = min(len([t for t in view.profiles if t not in allowed]), 2)
+        caps: Dict[int, int] = {}
+        if len(allowed) == 1:
+            caps[allowed[0]] = max(view.max_batch - latent, 1)
+        else:
+            # one reserved admission slot per co-tenant: enough for the
+            # predicted victim's first request to admit instantly, and
+            # cheap enough (1/max_batch capacity) that a backlogged
+            # aggressor is not pushed into queue divergence
+            for t in allowed:
+                others = len(allowed) - 1
+                caps[t] = max(view.max_batch - others - latent, 1)
+        if view.pool_used_frac > self.pool_high_water:
+            caps = {t: max(c // 2, 1) for t, c in caps.items()}
+            note = (note + "; " if note else "") + (
+                f"pool pressure {view.pool_used_frac:.2f}: halved caps")
+        return PlacementDecision(
+            step=view.step, policy=self.name, allowed=allowed, caps=caps,
+            predictions=tuple(preds), chosen=chosen, note=note,
+            default_cap=1)
+
+
+POLICIES = ("none", "static", "greedy", "oracle")
+
+
+def make_policy(name: str,
+                profiles: Optional[Mapping[int, str]] = None,
+                oracle: Optional[ContentionOracle] = None,
+                epoch_steps: int = 16,
+                **kw) -> PlacementPolicy:
+    """Factory used by the benchmark/CLI: policy name -> instance.
+
+    `profiles` (tenant -> declared app profile) is required for
+    "static" (it declares the tenant universe); "oracle" builds a
+    default `ContentionOracle` when none is passed (kw: design, cycles,
+    slots, unfairness_cap, ...).
+    """
+    if name == "none":
+        return PlacementPolicy(epoch_steps=epoch_steps)
+    if name == "static":
+        if not profiles:
+            raise ValueError("static placement needs declared profiles "
+                             "(the tenant universe)")
+        return StaticPartition(tuple(profiles), epoch_steps=epoch_steps)
+    if name == "greedy":
+        return GreedyShare(epoch_steps=epoch_steps, **kw)
+    if name == "oracle":
+        cap = kw.pop("unfairness_cap", 1.15)
+        if oracle is None:
+            oracle = ContentionOracle(**kw)
+        return OraclePlacement(oracle, epoch_steps=epoch_steps,
+                               unfairness_cap=cap)
+    raise KeyError(f"unknown placement policy {name!r}: {POLICIES}")

@@ -509,6 +509,99 @@ def run_grid(designs: Sequence[DesignLike],
     return out
 
 
+@dataclasses.dataclass(frozen=True)
+class MixPrediction:
+    """One candidate co-placement's predicted contention metrics.
+
+    Produced by `predict_mixes` (the serving oracle's entry point into
+    the simulator): per-app slowdown/speedup are §6 semantics — the
+    solo baseline keeps the app's core share (idle partners) and
+    removes memory contention, so `slowdown[i]` isolates what SHARING
+    the memory system costs app i in this mix."""
+
+    benches: Tuple[str, ...]
+    weighted_speedup: float
+    max_slowdown: float
+    slowdown: Tuple[float, ...]   # aligned with benches
+    ipc: Tuple[float, ...]
+    solo_ipc: Tuple[float, ...]
+
+
+def predict_mixes(design: DesignLike,
+                  mixes: Sequence[Sequence[str]],
+                  cycles: int = 2_000,
+                  slots: Optional[int] = None,
+                  pad_rows: int = 0,
+                  fail_soft: bool = False,
+                  solo_cache: Optional[Dict[str, float]] = None
+                  ) -> List[Union[MixPrediction, FailureRecord]]:
+    """Predict contention for candidate co-placement mixes in ONE
+    `run_grid` call (the oracle-facing helper).
+
+    Every mix (a tuple of bench names, no Nones) is padded with idle
+    partners to a common `slots` count, so candidates of different
+    co-run degrees batch into one (signature, n_apps) grid execution
+    together with the IPC_alone solo-baseline rows their benches need.
+    Slowdowns are therefore comparable across candidate sizes: each app
+    holds the same 1/slots core share in its mix AND in its baseline,
+    and the prediction isolates memory-system contention (§6).
+
+    `pad_rows > 0` pads the ROW COUNT up to the next multiple by
+    repeating the last row, keeping the vmapped grid shape stable
+    across calls: a serving loop that predicts every decision epoch
+    compiles exactly one program for the oracle's lifetime
+    (`runner.TRACE_COUNT` pins this in tests/test_serving_oracle.py).
+
+    `solo_cache` (mutated in place when given) carries solo IPCs across
+    calls so previously-seen benches don't re-simulate their baselines.
+    With `fail_soft=True` a failing chunk yields `FailureRecord`s in
+    place of predictions (and poisons only the mixes that needed it).
+    """
+    mixes = [tuple(b for b in m if b is not None) for m in mixes]
+    if not mixes:
+        return []
+    if any(not m for m in mixes):
+        raise ValueError("every candidate mix needs at least one bench")
+    n = max(len(m) for m in mixes)
+    slots = n if slots is None else slots
+    if n > slots:
+        raise ValueError(f"a candidate mix has {n} apps > slots={slots}")
+    solo_cache = {} if solo_cache is None else solo_cache
+    need_solo = sorted({b for m in mixes for b in m} - set(solo_cache))
+    rows = [m + (None,) * (slots - len(m)) for m in mixes]
+    rows += [(b,) + (None,) * (slots - 1) for b in need_solo]
+    if pad_rows > 0:
+        target = -(-len(rows) // pad_rows) * pad_rows
+        rows += [rows[-1]] * (target - len(rows))
+    grid = run_grid([design], rows, cycles, fail_soft=fail_soft)[0]
+
+    solo_fail: Dict[str, FailureRecord] = {}
+    for b, s in zip(need_solo, grid[len(mixes):len(mixes) + len(need_solo)]):
+        if isinstance(s, FailureRecord):
+            solo_fail[b] = s
+        else:
+            solo_cache[b] = float(s["ipc"][0])
+    out: List[Union[MixPrediction, FailureRecord]] = []
+    for m, s in zip(mixes, grid[:len(mixes)]):
+        if isinstance(s, FailureRecord):
+            out.append(s)
+            continue
+        bad = next((solo_fail[b] for b in m if b in solo_fail), None)
+        if bad is not None:
+            out.append(bad)
+            continue
+        solo = tuple(solo_cache[b] for b in m)
+        ipc = tuple(float(s["ipc"][i]) for i in range(len(m)))
+        slow = tuple(a / max(i, 1e-9) for a, i in zip(solo, ipc))
+        out.append(MixPrediction(
+            benches=m,
+            weighted_speedup=float(sum(i / max(a, 1e-9)
+                                       for i, a in zip(ipc, solo))),
+            max_slowdown=float(max(slow)),
+            slowdown=slow, ipc=ipc, solo_ipc=solo))
+    return out
+
+
 def run_pair(design: DesignLike, bench_a: str, bench_b: str,
              cycles: int = 60_000) -> Dict:
     """Co-run two apps under a design; returns per-app stats."""

@@ -82,6 +82,171 @@ def test_write_kv_and_block_table_gather():
     assert float(jnp.sum(pool.k[0, phys, 0])) > 0
 
 
+# ------------------------------------------------- engine scheduling laws
+# (stubbed token compute: the laws under test are host-side scheduling —
+# admission, silver quota/rotation, completion accounting)
+
+def _stub_engine(max_batch=4, max_seqs=8, profiles=None, placement=None,
+                 n_pages=64):
+    from repro.serving.engine import (EngineConfig, ServingEngine,
+                                      stub_forwards, stub_model_config)
+    cfg = kvc.PoolConfig(n_pages=n_pages, page_size=8, n_kv=1, head_dim=4,
+                         n_layers=1, max_seqs=max_seqs, pages_per_seq=4)
+    return ServingEngine(stub_model_config(), None, None, cfg,
+                         EngineConfig(max_batch=max_batch),
+                         placement=placement, profiles=profiles,
+                         forwards=stub_forwards())
+
+
+def _req(rid, tenant, max_new=3, plen=8):
+    from repro.serving.engine import Request
+    rng = np.random.RandomState(rid)
+    return Request(rid=rid, tenant=tenant,
+                   prompt=rng.randint(0, 64, plen), max_new=max_new)
+
+
+def test_completion_counts_decode_steps_only():
+    """A request finishes after exactly max_new DECODE steps; the token
+    the prefill emits is in `out` but is not a decode token (the old
+    off-by-one finished requests one decode early)."""
+    eng = _stub_engine()
+    eng.submit(_req(0, 0, max_new=3))
+    eng.run_until_drained(max_steps=20)
+    (r,) = eng.finished
+    assert len(r.out) == 4                 # prefill token + 3 decoded
+    assert r.decoded == 3
+    # prefill + first decode share a step, so finishing takes exactly
+    # max_new - 1 further steps (the old off-by-one finished one early)
+    assert r.finish_step - r.first_token_step == 2
+    from repro.serving import metrics as smet
+    tput = smet.tenant_throughput(eng.finished, eng.step_count)
+    assert tput[0] * eng.step_count == pytest.approx(3)   # decoded only
+
+
+def test_silver_backfill_fills_idle_slots():
+    """Over-quota silver requests run as NORMAL class when slots would
+    otherwise idle (the old behavior decoded only the quota head: one
+    token per step for a lone tenant)."""
+    eng = _stub_engine(max_batch=4)
+    for i in range(4):
+        eng.submit(_req(i, 0, max_new=5))
+    eng.step()                              # admits all 4, silver quota 1
+    assert len(eng.running) == 4
+    assert all(r.decoded == 1 for r in eng.running)   # backfilled slots ran
+    assert eng._silver_quota_used == 1      # ...but only 1 burned quota
+    eng.run_until_drained(max_steps=30)
+    assert len(eng.finished) == 4
+    # parallel decode: 5 decode steps + admission, not 4 reqs x 5 serial
+    assert eng.step_count <= 8
+
+
+def test_silver_rotation_covers_tenants_in_order():
+    eng = _stub_engine(max_batch=2, max_seqs=8)
+    for i in range(12):
+        eng.submit(_req(i, i % 3, max_new=4))
+    seen = []
+    for _ in range(40):
+        if not eng.running and not any(eng.queues.values()):
+            break
+        eng.step()
+        if not seen or seen[-1] != eng.silver_tenant:
+            seen.append(eng.silver_tenant)
+    assert set(seen) == {0, 1, 2}
+    # rotation is cyclic over the sorted live tenants
+    for a, b in zip(seen, seen[1:]):
+        live = sorted({0, 1, 2})
+        assert b == live[(live.index(a) + 1) % len(live)]
+
+
+def test_admission_backpressure_bounds_running():
+    """Admission respects max_batch and pool sequence slots; queued
+    work drains as capacity frees (no request is lost)."""
+    eng = _stub_engine(max_batch=3, max_seqs=4)
+    for i in range(10):
+        eng.submit(_req(i, 0, max_new=2))
+    peak = 0
+    for _ in range(60):
+        if not eng.running and not any(eng.queues.values()):
+            break
+        eng.step()
+        peak = max(peak, len(eng.running))
+    assert peak <= 3
+    assert len(eng.finished) == 10
+
+
+def test_placement_caps_gate_admission():
+    from repro.serving.placement import StaticPartition
+    eng = _stub_engine(max_batch=4, placement=StaticPartition((0, 1)),
+                       profiles={0: "batch", 1: "batch"})
+    for i in range(6):
+        eng.submit(_req(i, 0, max_new=2))
+    eng.step()
+    # static partition: tenant 0 may hold at most 4//2 = 2 slots even
+    # though the batch has room for 4
+    assert sum(1 for r in eng.running if r.tenant == 0) == 2
+    eng.run_until_drained(max_steps=40)
+    assert len(eng.finished) == 6
+    assert eng.decisions and eng.decisions[0].policy == "static"
+
+
+def test_stale_refresh_on_new_tenant():
+    """A tenant arriving mid-epoch triggers an early re-decision
+    instead of waiting out the epoch with a stale placement."""
+    from repro.serving.placement import GreedyShare
+    eng = _stub_engine(max_batch=4, placement=GreedyShare(epoch_steps=32),
+                       profiles={0: "batch", 1: "interactive"})
+    eng.submit(_req(0, 0, max_new=8))
+    eng.step()
+    assert len(eng.decisions) == 1
+    assert eng.decisions[-1].allowed == (0,)
+    eng.step()
+    assert len(eng.decisions) == 1          # nothing changed mid-epoch
+    eng.submit(_req(1, 1, max_new=2))
+    eng.step()                              # newcomer -> stale -> re-decide
+    assert len(eng.decisions) == 2
+    assert eng.decisions[-1].allowed == (0, 1)
+
+
+def test_pool_pressure_snapshot():
+    cfg, pool = _pool()
+    pool, _ = kvc.admit_seq(cfg, pool, jnp.int32(0), jnp.int32(1),
+                            jnp.int32(20))       # 3 pages for tenant 1
+    pool, _ = kvc.admit_seq(cfg, pool, jnp.int32(1), jnp.int32(2),
+                            jnp.int32(8))        # 1 page for tenant 2
+    p = kvc.pool_pressure(cfg, pool)
+    assert p.pages_by_tenant == {1: 3, 2: 1}
+    assert p.free_pages == cfg.n_pages - 4
+    assert p.used_frac == pytest.approx(4 / cfg.n_pages)
+    assert p.free_seqs == cfg.max_seqs - 2
+    pool = kvc.release_seq(cfg, pool, jnp.int32(0))
+    assert kvc.pool_pressure(cfg, pool).pages_by_tenant == {2: 1}
+
+
+def test_flood_vs_trickle_latency_bound():
+    """Even with NO placement layer, the engine's 3-class discipline
+    bounds the trickle tenant's latency: a flood of long decodes from
+    tenant 0 cannot push tenant 1's mean latency past a small multiple
+    of its solo latency."""
+    from repro.serving import metrics as smet
+    from repro.serving import stream as strm
+
+    trace = strm.make_trace("flood_vs_trickle", seed=0, steps=64)
+
+    def run(tr):
+        eng = _stub_engine(max_batch=8, max_seqs=16, n_pages=256,
+                           profiles=tr.profiles())
+        for step_reqs in strm.arrivals(tr, 64):
+            for r in step_reqs:
+                eng.submit(r)
+            eng.step()
+        eng.run_until_drained(max_steps=600)
+        return eng
+
+    solo = smet.tenant_mean_latency(run(trace.only(1)).finished)
+    shared = smet.tenant_mean_latency(run(trace).finished)
+    assert shared[1] <= 3.0 * solo[1]
+
+
 @pytest.mark.slow
 def test_engine_two_tenants_fairness():
     from repro.launch.serve import build_engine
