@@ -1,4 +1,4 @@
-"""Serving fairness benchmark -> BENCH_serving.json.
+"""Serving fairness + overload benchmark -> BENCH_serving.json.
 
 Drives seeded trace presets (repro.serving.stream) through the
 multi-tenant engine under each placement policy and reports the
@@ -12,20 +12,36 @@ paper's fairness metrics at the serving layer:
   fairness error       — |predicted - achieved| / achieved, where the
                          prediction is the contention oracle's mean
                          predicted max-slowdown over its chosen
-                         placements (only the "oracle" policy predicts)
+                         placements (only the "oracle" policy predicts;
+                         recalibration feeds achieved slowdowns back,
+                         so this error should SHRINK as the run ages)
 
 plus TTFT, latency percentiles, SLO attainment (SLO = 3x the tenant's
-solo mean latency) and per-tenant throughput. Token compute is stubbed
-(`ServingEngine(forwards=stub_forwards())`): latencies are measured in
-ENGINE STEPS, so the benchmark isolates scheduling/admission behavior
-— which is what the policies differ on — and stays fast enough for CI.
+solo mean latency), per-tenant throughput, per-rung degradation-ladder
+attribution (how often each of normal/quota/preempt/freeze/safe_* fired
+and why — `repro.serving.metrics.rung_counts`), preemption/recalibration
+accounting, and a request-conservation audit.
 
-The headline check (also asserted by tests/test_serving_oracle.py):
-on flood_vs_trickle the oracle policy must STRICTLY improve
-unfairness over the admit-all "none" baseline.
+The engine runs with admission DECOUPLED from decode capacity
+(`max_running > max_batch`): up to `max_running` requests hold KV slots
+while `max_batch` decode per step, which is what gives decode-quota
+shaping and preemption purchase on saturating traces.
 
-Run:   PYTHONPATH=src python benchmarks/serving_bench.py
-Smoke: PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+The overload section replays a seeded `ServingFaultPlan` (pool-
+exhaustion spike + poisoned profile + oracle stall) on a small pool and
+asserts the robustness laws: zero requests lost or duplicated, the
+safe-mode fallback engages AND recovers, and the whole run is
+bit-for-bit deterministic (two fresh engines, identical fingerprints).
+
+Token compute is stubbed (`ServingEngine(forwards=stub_forwards())`):
+latencies are measured in ENGINE STEPS, so the benchmark isolates
+scheduling/admission behavior — which is what the policies differ on —
+and stays fast enough for CI.
+
+Run:            PYTHONPATH=src python benchmarks/serving_bench.py
+Smoke:          PYTHONPATH=src python benchmarks/serving_bench.py --smoke
+Overload smoke: PYTHONPATH=src python benchmarks/serving_bench.py \
+                    --overload-smoke
 """
 from __future__ import annotations
 
@@ -41,51 +57,66 @@ from repro.serving import metrics as smet                     # noqa: E402
 from repro.serving import stream as strm                      # noqa: E402
 from repro.serving.engine import (EngineConfig, ServingEngine,  # noqa: E402
                                   stub_forwards, stub_model_config)
-from repro.serving.oracle import ContentionOracle             # noqa: E402
+from repro.serving.oracle import (ContentionOracle,           # noqa: E402
+                                  Recalibrator)
 from repro.serving.placement import POLICIES, make_policy     # noqa: E402
+from repro.sim.faults import (ServingFault,                   # noqa: E402
+                              ServingFaultPlan)
 
 POOL = kvc.PoolConfig(n_pages=256, page_size=8, n_kv=1, head_dim=4,
                       n_layers=1, max_seqs=16, pages_per_seq=8)
+# deliberately tight pool for the overload/fault runs: a spike can
+# actually exhaust it, so every ladder rung is reachable
+OVERLOAD_POOL = kvc.PoolConfig(n_pages=64, page_size=8, n_kv=1, head_dim=4,
+                               n_layers=1, max_seqs=16, pages_per_seq=8)
+MAX_BATCH = 8
+MAX_RUNNING = 12     # admission decoupled from decode capacity
 
 
-def run_trace(trace: strm.TraceSpec, policy, max_batch: int = 8,
-              drain_steps: int = 800):
+def _oracle_for(trace: strm.TraceSpec, cycles: int) -> ContentionOracle:
+    slots = min(max(len(trace.specs), 2), 4)
+    return ContentionOracle(cycles=cycles, slots=slots, pad_rows=8)
+
+
+def run_trace(trace: strm.TraceSpec, policy, solo_hint=None,
+              drain_steps: int = 1200, pool: kvc.PoolConfig = POOL,
+              fault_plan: ServingFaultPlan = None) -> ServingEngine:
     cfg = stub_model_config()
-    eng = ServingEngine(cfg, None, None, POOL,
-                        EngineConfig(max_batch=max_batch),
+    eng = ServingEngine(cfg, None, None, pool,
+                        EngineConfig(max_batch=MAX_BATCH,
+                                     max_running=MAX_RUNNING,
+                                     fault_plan=fault_plan),
                         placement=policy, profiles=trace.profiles(),
-                        forwards=stub_forwards())
-    for step_reqs in strm.arrivals(trace, cfg.vocab_size):
-        for r in step_reqs:
-            eng.submit(r)
-        eng.step()
-    eng.run_until_drained(max_steps=drain_steps)
+                        forwards=stub_forwards(), solo_hint=solo_hint)
+    strm.drive(eng, trace, drain_steps=drain_steps)
     return eng
+
+
+def solo_baselines(trace: strm.TraceSpec, pool: kvc.PoolConfig = POOL):
+    solo_lat = {}
+    for spec in trace.specs:
+        e = run_trace(trace.only(spec.tenant), make_policy("none"),
+                      pool=pool)
+        solo_lat.update(smet.tenant_mean_latency(e.finished))
+    return solo_lat
 
 
 def bench_trace(trace: strm.TraceSpec, policies, cycles: int,
                 epoch_steps: int, unfairness_cap: float):
     # solo baselines: same seeded arrivals, one tenant at a time
-    solo_lat = {}
-    for spec in trace.specs:
-        e = run_trace(trace.only(spec.tenant), make_policy("none"))
-        solo_lat.update(smet.tenant_mean_latency(e.finished))
+    solo_lat = solo_baselines(trace)
     out = {"steps": trace.steps, "seed": trace.seed,
            "tenants": {s.tenant: s.profile for s in trace.specs},
            "solo_mean_latency": {t: round(v, 3)
                                  for t, v in sorted(solo_lat.items())},
            "policies": {}}
     for pol in policies:
-        oracle = None
-        if pol == "oracle":
-            oracle = ContentionOracle(cycles=cycles,
-                                      slots=max(len(trace.specs), 2),
-                                      pad_rows=8)
+        oracle = _oracle_for(trace, cycles) if pol == "oracle" else None
         policy = make_policy(pol, profiles=trace.profiles(), oracle=oracle,
                              epoch_steps=epoch_steps,
                              **({"unfairness_cap": unfairness_cap}
                                 if pol == "oracle" else {}))
-        eng = run_trace(trace, policy)
+        eng = run_trace(trace, policy, solo_hint=solo_lat)
         rep = smet.fairness_report(eng.finished, solo_lat, eng.decisions)
         slo = {t: 3.0 * solo_lat[t] for t in solo_lat}
         rec = {
@@ -116,6 +147,8 @@ def bench_trace(trace: strm.TraceSpec, policies, cycles: int,
                 for t, v in sorted(smet.tenant_throughput(
                     eng.finished, eng.step_count).items())},
             "decisions": smet.decision_summary(eng.decisions),
+            "overload": smet.overload_summary(eng),
+            "conservation": smet.conservation_report(eng),
         }
         if oracle is not None:
             rec["oracle"] = {"grid_calls": oracle.grid_calls,
@@ -123,9 +156,131 @@ def bench_trace(trace: strm.TraceSpec, policies, cycles: int,
                              "sim_failures": len(oracle.failures)}
         out["policies"][pol] = rec
         print(f"  {trace.name:<18} {pol:<7} unfair "
-              f"{rec['unfairness']:<7} slowdown "
-              f"{rec['tenant_slowdown']}", flush=True)
+              f"{rec['unfairness']:<7} rungs "
+              f"{rec['decisions']['rungs']} preempt "
+              f"{rec['overload']['preemptions']}", flush=True)
     return out
+
+
+# ------------------------------------------------------------- overload
+
+def overload_plan(seed: int) -> ServingFaultPlan:
+    """The acceptance scenario: an oracle stall, then a pool-exhaustion
+    spike, then a poisoned profile — every rung of the ladder plus the
+    safe-mode state machine, in one seeded plan."""
+    return ServingFaultPlan(seed=seed, faults=(
+        ServingFault("oracle_stall", step=16, duration=8),
+        ServingFault("profile_poison", step=36, duration=36,
+                     tenant=0, profile="interactive"),
+        ServingFault("pool_spike", step=40, duration=32,
+                     pages=OVERLOAD_POOL.n_pages),
+    ))
+
+
+def _fingerprint(eng: ServingEngine):
+    """Bit-for-bit replay evidence: the full externally-visible history
+    of one run."""
+    return (
+        tuple((r.rid, r.tenant, r.submit_step, r.first_token_step,
+               r.finish_step, r.retries, r.wasted_tokens, len(r.out))
+              for r in sorted(eng.finished, key=lambda r: r.rid)),
+        tuple((d.step, d.rung, d.allowed, tuple(sorted(d.caps.items())),
+               tuple(sorted(d.decode_quota.items())),
+               tuple(sorted(d.preempt.items())))
+              for d in eng.decisions),
+        tuple(eng.preempt_log),
+        tuple(eng.fault_log),
+        tuple(getattr(eng.placement, "mode_log", [])),
+    )
+
+
+def overload_run(seed: int, cycles: int, epoch_steps: int,
+                 policy_name: str = "oracle"):
+    trace = strm.make_trace("flood_vs_trickle", seed=seed, steps=240)
+    solo_lat = solo_baselines(trace, pool=OVERLOAD_POOL)
+    plan = overload_plan(seed)
+
+    def build():
+        oracle = (_oracle_for(trace, cycles)
+                  if policy_name == "oracle" else None)
+        kw = {}
+        if policy_name == "oracle":
+            # sensitive safe-mode thresholds + a fast recalibrator: the
+            # poisoned-profile window must demonstrably degrade AND
+            # re-engage inside the run
+            kw = {"degrade_error": 0.4, "reengage_error": 0.28,
+                  "error_window": 2,
+                  "recalibrator": Recalibrator(alpha=0.5)}
+        policy = make_policy(policy_name, profiles=trace.profiles(),
+                             oracle=oracle, epoch_steps=epoch_steps, **kw)
+        return run_trace(trace, policy, solo_hint=solo_lat,
+                         pool=OVERLOAD_POOL, fault_plan=plan,
+                         drain_steps=2000)
+
+    eng = build()
+    cons = smet.conservation_report(eng)
+    over = smet.overload_summary(eng)
+    rep = smet.fairness_report(eng.finished, solo_lat, eng.decisions)
+    fp_a = _fingerprint(eng)
+    fp_b = _fingerprint(build())
+    modes = [lvl for _, lvl, _ in over["safe_mode_log"]]
+    engaged = any(lvl > 0 for lvl in modes)
+    recovered = (engaged and over["safe_level_final"] <
+                 max(modes)) if modes else False
+    return {
+        "trace": trace.name,
+        "steps": trace.steps,
+        "plan": [(f.kind, f.step, f.duration, f.tenant)
+                 for f in plan.faults],
+        "unfairness": round(rep["unfairness"], 4),
+        "conservation": cons,
+        "overload": over,
+        "rungs": smet.rung_counts(eng.decisions),
+        "deterministic": fp_a == fp_b,
+        "safe_mode_engaged": engaged,
+        "safe_mode_recovered": recovered,
+    }
+
+
+def overload_smoke(seed: int, cycles: int, epoch_steps: int) -> int:
+    """CI gate: a saturating trace with injected pool-exhaustion faults.
+    Asserts (a) zero lost/duplicated requests and (b) the protective
+    policy's unfairness <= admit-all's under the SAME faults."""
+    trace = strm.make_trace("flood_vs_trickle", seed=seed, steps=96)
+    solo_lat = solo_baselines(trace, pool=OVERLOAD_POOL)
+    plan = ServingFaultPlan(seed=seed, faults=(
+        ServingFault("pool_spike", step=20, duration=24,
+                     pages=OVERLOAD_POOL.n_pages),
+        ServingFault("pool_spike", step=60, duration=16,
+                     pages=OVERLOAD_POOL.n_pages // 2),
+    ))
+    unfair, ok = {}, True
+    for pol in ("none", "oracle"):
+        oracle = _oracle_for(trace, cycles) if pol == "oracle" else None
+        policy = make_policy(pol, profiles=trace.profiles(), oracle=oracle,
+                             epoch_steps=epoch_steps)
+        eng = run_trace(trace, policy, solo_hint=solo_lat,
+                        pool=OVERLOAD_POOL, fault_plan=plan,
+                        drain_steps=2000)
+        cons = smet.conservation_report(eng)
+        rep = smet.fairness_report(eng.finished, solo_lat, eng.decisions)
+        unfair[pol] = rep["unfairness"]
+        print(f"overload-smoke {pol:<7} unfair {rep['unfairness']:.4f} "
+              f"lost {cons['lost']} dup {cons['duplicated']} "
+              f"preempt {eng.preemptions} "
+              f"rungs {smet.rung_counts(eng.decisions)}", flush=True)
+        if not cons["ok"]:
+            print(f"FAIL: {pol} lost/duplicated requests: {cons}")
+            ok = False
+    if unfair["oracle"] > unfair["none"] + 1e-9:
+        print(f"FAIL: protective unfairness {unfair['oracle']:.4f} > "
+              f"admit-all {unfair['none']:.4f}")
+        ok = False
+    print(f"overload-smoke: {'PASS' if ok else 'FAIL'}")
+    return 0 if ok else 1
+
+
+PR8_FLOOD_FAIRNESS_ERROR = 0.17744839002002596  # uncorrected baseline
 
 
 def main():
@@ -133,7 +288,8 @@ def main():
     ap.add_argument("--out", default=os.path.join(
         os.path.dirname(__file__), "..", "BENCH_serving.json"))
     ap.add_argument("--traces", nargs="*",
-                    default=["flood_vs_trickle", "churn", "heavy_tail"])
+                    default=["flood_vs_trickle", "churn", "heavy_tail",
+                             "many_tenants"])
     ap.add_argument("--policies", nargs="*", default=list(POLICIES))
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--steps", type=int, default=None,
@@ -144,28 +300,76 @@ def main():
     ap.add_argument("--unfairness-cap", type=float, default=1.15)
     ap.add_argument("--smoke", action="store_true",
                     help="CI mode: one trace, short, fewer sim cycles")
+    ap.add_argument("--overload-smoke", action="store_true",
+                    help="CI mode: saturating trace + pool-exhaustion "
+                         "faults; exit nonzero on lost requests or "
+                         "protective unfairness > admit-all")
+    ap.add_argument("--no-overload", action="store_true",
+                    help="skip the overload fault-plan section")
     args = ap.parse_args()
+    if args.overload_smoke:
+        sys.exit(overload_smoke(args.seed, min(args.cycles, 300),
+                                args.epoch_steps))
     if args.smoke:
         args.traces = ["flood_vs_trickle"]
         args.cycles = min(args.cycles, 300)
+        args.no_overload = True
 
     results = {"seed": args.seed, "cycles": args.cycles,
                "epoch_steps": args.epoch_steps,
                "unfairness_cap": args.unfairness_cap,
+               "max_batch": MAX_BATCH, "max_running": MAX_RUNNING,
                "policies": list(args.policies), "traces": {}}
     for name in args.traces:
         trace = strm.make_trace(name, seed=args.seed, steps=args.steps)
-        print(f"{name} (steps={trace.steps}, seed={trace.seed}):",
-              flush=True)
+        print(f"{name} (steps={trace.steps}, seed={trace.seed}, "
+              f"tenants={len(trace.specs)}):", flush=True)
         results["traces"][name] = bench_trace(
             trace, args.policies, args.cycles, args.epoch_steps,
             args.unfairness_cap)
 
+    if not args.no_overload:
+        print("overload fault-plan run:", flush=True)
+        results["overload"] = overload_run(args.seed, min(args.cycles, 300),
+                                           args.epoch_steps)
+        o = results["overload"]
+        print(f"  lost {o['conservation']['lost']} "
+              f"dup {o['conservation']['duplicated']} "
+              f"safe-mode engaged={o['safe_mode_engaged']} "
+              f"recovered={o['safe_mode_recovered']} "
+              f"deterministic={o['deterministic']}", flush=True)
+
     checks = {}
-    fv = results["traces"].get("flood_vs_trickle", {}).get("policies", {})
+    tr = results["traces"]
+    fv = tr.get("flood_vs_trickle", {}).get("policies", {})
     if "oracle" in fv and "none" in fv:
         checks["oracle_beats_none_flood_vs_trickle"] = bool(
             fv["oracle"]["unfairness"] < fv["none"]["unfairness"])
+        err = fv["oracle"]["fairness_error"]
+        checks["flood_fairness_error_improved_vs_pr8"] = bool(
+            err is not None and err < PR8_FLOOD_FAIRNESS_ERROR)
+    wins = 0
+    presets3 = [n for n in ("flood_vs_trickle", "churn", "heavy_tail")
+                if n in tr]
+    for name in presets3:
+        pols = tr[name]["policies"]
+        if "oracle" in pols and "none" in pols and \
+                pols["oracle"]["unfairness"] <= pols["none"]["unfairness"] \
+                + 1e-9:
+            wins += 1
+    if presets3:
+        checks["protective_leq_none_on_2_of_3"] = bool(
+            wins >= min(2, len(presets3)))
+    conserved = all(
+        rec["conservation"]["ok"]
+        for t in tr.values() for rec in t["policies"].values())
+    checks["zero_lost_or_duplicated"] = bool(conserved)
+    if "overload" in results:
+        o = results["overload"]
+        checks["overload_zero_lost"] = bool(o["conservation"]["ok"])
+        checks["overload_safe_mode_engaged_and_recovered"] = bool(
+            o["safe_mode_engaged"] and o["safe_mode_recovered"])
+        checks["overload_deterministic"] = bool(o["deterministic"])
     results["checks"] = checks
 
     with open(args.out, "w") as f:

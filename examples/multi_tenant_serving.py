@@ -11,9 +11,7 @@ slots so the aggressor cannot crowd the victim out of the batch.
 
 Run:  PYTHONPATH=src python examples/multi_tenant_serving.py
 """
-import numpy as np
-
-from repro.launch.serve import build_engine, run_trace
+from repro.launch.serve import build_engine
 from repro.serving import metrics as smet
 from repro.serving import stream as strm
 
@@ -26,7 +24,7 @@ for policy in ("none", "oracle"):
     eng = build_engine("qwen3-4b", policy=policy,
                        profiles=trace.profiles(),
                        **({"cycles": 300} if policy == "oracle" else {}))
-    finished = run_trace(eng, trace)
+    finished = strm.drive(eng, trace)
     lat = smet.tenant_mean_latency(finished)
     ttft = smet.tenant_ttft(finished)
     results[policy] = lat

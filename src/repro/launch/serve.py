@@ -6,10 +6,18 @@ Ad-hoc requests (legacy mode):
       --requests 8
 
 Trace-driven with a placement policy (serving.stream presets; the
-"oracle" policy consults the simulator-backed contention oracle):
+"oracle" policy consults the simulator-backed contention oracle and
+walks the overload degradation ladder — quota -> preempt -> freeze ->
+safe mode — under KV-pool pressure):
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
       --trace flood_vs_trickle --steps 24 --policy oracle
+
+Overload drills inject a seeded serving-fault plan (pool-exhaustion
+spikes, oracle stalls, poisoned profiles — repro.sim.faults):
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3-4b \
+      --trace flood_vs_trickle --policy oracle --faults --fault-rate 0.1
 """
 from __future__ import annotations
 
@@ -27,6 +35,7 @@ from repro.serving import metrics as smet
 from repro.serving import stream as strm
 from repro.serving.engine import EngineConfig, Request, ServingEngine
 from repro.serving.placement import POLICIES, make_policy
+from repro.sim.faults import random_serving_plan
 
 
 def build_engine(arch: str, max_seqs: int = 16, policy: str = "none",
@@ -54,15 +63,6 @@ def build_engine(arch: str, max_seqs: int = 16, policy: str = "none",
                          placement=placement, profiles=profiles)
 
 
-def run_trace(eng: ServingEngine, trace: strm.TraceSpec,
-              drain_steps: int = 400):
-    for step_reqs in strm.arrivals(trace, eng.cfg.vocab_size):
-        for r in step_reqs:
-            eng.submit(r)
-        eng.step()
-    return eng.run_until_drained(max_steps=drain_steps)
-
-
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-4b")
@@ -75,22 +75,39 @@ def main():
     ap.add_argument("--epoch-steps", type=int, default=8)
     ap.add_argument("--cycles", type=int, default=300,
                     help="oracle: simulator cycles per prediction")
+    ap.add_argument("--max-batch", type=int, default=8,
+                    help="decode slots per engine step")
+    ap.add_argument("--max-running", type=int, default=None,
+                    help="admission bound (> max-batch gives decode "
+                         "quotas/preemption a lever; default: coupled)")
+    ap.add_argument("--faults", action="store_true",
+                    help="inject a seeded random serving-fault plan "
+                         "(pool spikes, oracle stalls, poisoned profiles)")
+    ap.add_argument("--fault-rate", type=float, default=0.05)
     ap.add_argument("--tenants", type=int, default=2)
     ap.add_argument("--requests", type=int, default=6)
     ap.add_argument("--prompt-len", type=int, default=12)
     ap.add_argument("--max-new", type=int, default=8)
     args = ap.parse_args()
 
+    ecfg = EngineConfig(max_batch=args.max_batch,
+                        max_running=args.max_running,
+                        backoff_seed=args.seed)
     if args.trace:
         trace = strm.make_trace(args.trace, seed=args.seed,
                                 steps=args.steps)
+        if args.faults:
+            ecfg.fault_plan = random_serving_plan(
+                args.seed, trace.steps,
+                tuple(s.tenant for s in trace.specs),
+                rate=args.fault_rate)
         kw = {"cycles": args.cycles} if args.policy == "oracle" else {}
         eng = build_engine(args.arch, policy=args.policy,
                            profiles=trace.profiles(),
-                           epoch_steps=args.epoch_steps, **kw)
-        finished = run_trace(eng, trace)
+                           epoch_steps=args.epoch_steps, ecfg=ecfg, **kw)
+        finished = strm.drive(eng, trace)
     else:
-        eng = build_engine(args.arch, policy=args.policy,
+        eng = build_engine(args.arch, policy=args.policy, ecfg=ecfg,
                            profiles={t: "batch"
                                      for t in range(args.tenants)})
         rng = np.random.RandomState(args.seed)
@@ -108,11 +125,22 @@ def main():
     for t, v in sorted(tput.items()):
         print(f"  tenant {t}: {v:.2f} tok/step")
     print(f"mean latency {smet.mean_latency(finished):.1f} steps")
+    cons = smet.conservation_report(eng)
+    print(f"conservation: submitted {cons['submitted']} "
+          f"finished {cons['finished']} lost {cons['lost']} "
+          f"duplicated {cons['duplicated']}")
     if eng.decisions:
         summ = smet.decision_summary(eng.decisions)
+        print(f"ladder rungs: {summ['rungs']}")
         if summ["predicted_max_slowdown_mean"] is not None:
             print(f"oracle predicted max slowdown (mean over epochs): "
                   f"{summ['predicted_max_slowdown_mean']:.3f}")
+    if eng.preemptions or eng.fault_log:
+        over = smet.overload_summary(eng)
+        print(f"preemptions {over['preemptions']} "
+              f"wasted tokens {over['wasted_tokens']} "
+              f"faults {over['faults_injected']} "
+              f"safe-mode log {over['safe_mode_log']}")
 
 
 if __name__ == "__main__":

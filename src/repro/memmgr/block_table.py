@@ -51,7 +51,10 @@ def alloc_pages(bt: BlockTables, seq_slot, start_page, count, asid
     max_count = bt.leaf.shape[1]
     idx = jnp.arange(max_count)
     take = idx < count
-    ok = count <= n_free(bt)
+    # an allocation past the seq's logical capacity must fail WHOLE:
+    # a page granted but unmappable would hold an owner while no leaf
+    # entry references it — free_seq could then never reclaim it
+    ok = (count <= n_free(bt)) & (start_page + count <= max_count)
 
     phys = bt.free_list[(bt.free_head + idx) % bt.free_list.shape[0]]
     phys = jnp.where(take & ok, phys, FREE)

@@ -11,7 +11,7 @@ into the serving engine (DESIGN.md §2b).
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, NamedTuple, Optional, Tuple
+from typing import Dict, NamedTuple, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -167,6 +167,36 @@ class PoolPressure(NamedTuple):
     free_pages: int
     free_seqs: int                    # unoccupied sequence slots
     pages_by_tenant: Dict[int, int]   # ASID -> pages held
+
+
+# ASID reserved for fault-injected phantom sequences (pool-exhaustion
+# spikes): far outside any tenant universe, filtered out of per-tenant
+# page attribution but counted in used_frac — the spike IS the pressure.
+PHANTOM_ASID = 1_000_003
+
+
+def occupy_pages(cfg: PoolConfig, pool: KVPool, free_slots: list,
+                 pages: int) -> Tuple[KVPool, list]:
+    """Admit phantom sequences under `PHANTOM_ASID` occupying up to
+    `pages` KV pages (a deterministic pool-exhaustion spike for fault
+    injection). Consumes slots from `free_slots` (mutated in place, same
+    discipline as the engine's slot list); stops early when the pool or
+    the slot list runs out. Returns (pool', used_slots) — the caller
+    releases each slot through `release_seq_jit` to end the spike."""
+    used: list = []
+    left = int(pages)
+    while left > 0 and free_slots:
+        take = min(left, cfg.pages_per_seq)
+        slot = free_slots.pop()
+        pool, ok = admit_seq_jit(cfg, pool, jnp.int32(slot),
+                                 jnp.int32(PHANTOM_ASID),
+                                 jnp.int32(take * cfg.page_size))
+        if not bool(ok):
+            free_slots.append(slot)
+            break
+        used.append(slot)
+        left -= take
+    return pool, used
 
 
 def pool_pressure(cfg: PoolConfig, pool: KVPool) -> PoolPressure:

@@ -141,7 +141,71 @@ def decision_summary(decisions) -> Dict[str, object]:
             if chosen else None),
         "mean_allowed_tenants": (float(np.mean(allowed_sizes))
                                  if allowed_sizes else 0.0),
+        "rungs": rung_counts(decisions),
         "notes": sorted({d.note for d in decisions if d.note}),
+    }
+
+
+def rung_counts(decisions) -> Dict[str, int]:
+    """Degradation-ladder attribution: how many decision epochs landed
+    on each rung (`placement.RUNGS`) — the benchmark's WHY record."""
+    counts: Dict[str, int] = {}
+    for d in decisions:
+        rung = getattr(d, "rung", "normal")
+        counts[rung] = counts.get(rung, 0) + 1
+    return counts
+
+
+def conservation_report(eng) -> Dict[str, object]:
+    """Request-conservation audit across admit/evict/re-queue cycles:
+    every submitted rid must be in exactly one of {queued, running,
+    parked, finished}, exactly once. `lost`/`duplicated` are the
+    violation counts (both must be 0 — the preemption invariant)."""
+    seen: Dict[int, int] = {}
+    for q in eng.queues.values():
+        for r in q:
+            seen[r.rid] = seen.get(r.rid, 0) + 1
+    for pool in (eng.running, eng.parked, eng.finished):
+        for r in pool:
+            seen[r.rid] = seen.get(r.rid, 0) + 1
+    duplicated = sum(n - 1 for n in seen.values() if n > 1)
+    lost = eng.submitted - len(seen)
+    return {
+        "submitted": eng.submitted,
+        "finished": len(eng.finished),
+        "pending": eng.pending(),
+        "lost": lost,
+        "duplicated": duplicated,
+        "ok": lost == 0 and duplicated == 0,
+    }
+
+
+def overload_summary(eng) -> Dict[str, object]:
+    """Overload/robustness attribution for one engine run: preemption
+    counts, wasted (re-accounted) tokens, injected faults by kind,
+    safe-mode transitions, and the recalibrator's movement — next to
+    `rung_counts` this answers WHY a protective policy won or lost."""
+    pol = eng.placement
+    recal = getattr(pol, "recalibrator", None)
+    faults: Dict[str, int] = {}
+    for _, kind, _ in eng.fault_log:
+        faults[kind] = faults.get(kind, 0) + 1
+    return {
+        "preemptions": eng.preemptions,
+        "preempted_tenants": sorted({t for _, t, _ in eng.preempt_log}),
+        "wasted_tokens": int(sum(r.wasted_tokens
+                                 for r in (eng.finished + eng.running
+                                           + eng.parked))),
+        "faults_injected": faults,
+        "safe_mode_log": [tuple(e) for e in getattr(pol, "mode_log", [])],
+        "safe_level_final": getattr(pol, "safe_level", 0),
+        "recalibration": None if recal is None else {
+            "updates": recal.updates,
+            "rejected": recal.rejected,
+            "last_delta": recal.last_delta,
+            "corrections": {int(t): float(c)
+                            for t, c in sorted(recal.corrections().items())},
+        },
     }
 
 

@@ -23,11 +23,12 @@ small bucket set so the engine's prefill compiles stay bounded.
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from repro.serving.engine import Request
+from repro.serving.engine import Request, ServingEngine
+from repro.sim.workloads import churn_schedule
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +116,83 @@ def arrivals(trace: TraceSpec, vocab_size: int,
     return out
 
 
+# ------------------------------------------------- shared churn timeline
+
+def schedule_to_specs(schedule: Sequence[Tuple[Optional[str], ...]],
+                      seg_steps: int, rate: float = 0.35,
+                      prompt_lens: Tuple[int, ...] = (8,),
+                      max_new: int = 6) -> Tuple[TenantSpec, ...]:
+    """Map a `sim.workloads.churn_schedule` (per-segment bench tuples,
+    None = empty slot) onto serving `TenantSpec`s: each contiguous
+    occupancy interval of a slot becomes a FRESH tenant (new id) live on
+    [seg_start * seg_steps, seg_end * seg_steps) with the slot's bench
+    as its declared profile. The simulator's segmented runner and the
+    serving trace driver thereby share ONE seeded timeline generator —
+    the same birth-death draw drives both. (A same-bench hand-off at a
+    boundary is indistinguishable in the tuple encoding and coalesces
+    into one tenant.)"""
+    if seg_steps < 1:
+        raise ValueError(f"seg_steps must be >= 1, got {seg_steps}")
+    specs: List[TenantSpec] = []
+    n_slots = len(schedule[0])
+    tenant = 0
+    for slot in range(n_slots):
+        seg = 0
+        while seg < len(schedule):
+            bench = schedule[seg][slot]
+            if bench is None:
+                seg += 1
+                continue
+            end = seg
+            while end < len(schedule) and schedule[end][slot] == bench:
+                end += 1
+            specs.append(TenantSpec(
+                tenant, profile=bench, rate=rate, prompt_lens=prompt_lens,
+                max_new=max_new, start=seg * seg_steps,
+                stop=end * seg_steps))
+            tenant += 1
+            seg = end
+    return tuple(specs)
+
+
+def _tenant_pending(eng: ServingEngine, tenant: int) -> int:
+    return (len(eng.queues.get(tenant, ())) +
+            sum(1 for r in eng.running if r.tenant == tenant) +
+            sum(1 for r in eng.parked if r.tenant == tenant))
+
+
+def drive(eng: ServingEngine, trace: TraceSpec,
+          drain_steps: int = 400) -> List[Request]:
+    """The canonical serving loop: submit the trace's arrivals ahead of
+    each engine step, RETIRE each departed tenant once its live window
+    closed and its last request drained (placement caches evicted — the
+    churn-staleness contract), then drain. Used by the launcher, the
+    examples, and the serving benchmark so they all exercise one
+    lifecycle path."""
+    stops = {s.tenant: s.stop for s in trace.specs if s.stop is not None}
+    retired: set = set()
+
+    def _retire_done(step: int):
+        for t, stop in stops.items():
+            if t not in retired and step >= stop \
+                    and _tenant_pending(eng, t) == 0:
+                eng.retire_tenant(t)
+                retired.add(t)
+
+    for step_reqs in arrivals(trace, eng.cfg.vocab_size):
+        for r in step_reqs:
+            eng.submit(r)
+        eng.step()
+        _retire_done(eng.step_count)
+    for _ in range(drain_steps):
+        if eng.pending() == 0:
+            break
+        eng.step()
+        _retire_done(eng.step_count)
+    _retire_done(eng.step_count)
+    return eng.finished
+
+
 # ---------------------------------------------------------------- presets
 
 def flood_vs_trickle(seed: int = 0, steps: int = 96) -> TraceSpec:
@@ -136,16 +214,31 @@ def flood_vs_trickle(seed: int = 0, steps: int = 96) -> TraceSpec:
 
 
 def churn(seed: int = 0, steps: int = 120) -> TraceSpec:
-    """Tenants arrive and depart mid-trace (staggered live windows):
-    placement must adapt as the active set changes."""
-    third = steps // 3
-    return TraceSpec("churn", steps, (
-        TenantSpec(0, "batch", rate=0.7, prompt_lens=(8,), max_new=6),
-        TenantSpec(1, "streaming", rate=0.3, prompt_lens=(8, 16),
-                   max_new=6, stop=2 * third),
-        TenantSpec(2, "scattered", rate=0.3, prompt_lens=(8,), max_new=6,
-                   start=third),
-    ), seed=seed)
+    """Tenants arrive and depart mid-trace: placement must adapt as the
+    active set changes. The live windows come from the SAME seeded
+    birth-death generator the simulator's segmented runner churns with
+    (`sim.workloads.churn_schedule` via `schedule_to_specs`) — serving
+    traces and sim churn share one timeline."""
+    n_segments = 6
+    sched = churn_schedule(seed=seed, n_segments=n_segments, n_slots=3,
+                           arrival_rate=0.5, departure_rate=0.3)
+    specs = schedule_to_specs(sched, max(steps // n_segments, 1),
+                              rate=0.35, prompt_lens=(8,), max_new=6)
+    return TraceSpec("churn", steps, specs, seed=seed)
+
+
+def many_tenants(seed: int = 0, steps: int = 120) -> TraceSpec:
+    """Tens of tenants churning through a wide slot array (the scale
+    stressor): each occupancy interval of a 12-slot churn schedule is a
+    fresh tenant, so the trace carries dozens of distinct tenant ids —
+    placement, oracle memoization, and the retirement path must all
+    stay cheap and correct at this width."""
+    n_segments = 6
+    sched = churn_schedule(seed=seed, n_segments=n_segments, n_slots=12,
+                           arrival_rate=0.6, departure_rate=0.35)
+    specs = schedule_to_specs(sched, max(steps // n_segments, 1),
+                              rate=0.12, prompt_lens=(8,), max_new=4)
+    return TraceSpec("many_tenants", steps, specs, seed=seed)
 
 
 def heavy_tail(seed: int = 0, steps: int = 96) -> TraceSpec:
@@ -165,6 +258,7 @@ PRESETS = {
     "flood_vs_trickle": flood_vs_trickle,
     "churn": churn,
     "heavy_tail": heavy_tail,
+    "many_tenants": many_tenants,
 }
 
 

@@ -1,0 +1,95 @@
+"""Hypothesis property tests for the preemption/overload invariants:
+request conservation across evict/re-queue cycles, exactly-once KV page
+release, and deterministic seeded backoff. Skips itself gracefully when
+`hypothesis` is absent (same policy as test_core_tlb_properties.py);
+the deterministic core versions always run in test_serving_overload.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+import hypothesis.strategies as st  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
+
+from repro.memmgr import kv_cache as kvc  # noqa: E402
+from repro.serving import metrics as smet  # noqa: E402
+from repro.serving.engine import (EngineConfig, Request,  # noqa: E402
+                                  ServingEngine, backoff_steps,
+                                  stub_forwards, stub_model_config)
+from repro.serving.placement import PlacementPolicy  # noqa: E402
+from repro.sim.faults import (ServingFault,  # noqa: E402
+                              ServingFaultPlan)
+
+POOL = kvc.PoolConfig(n_pages=64, page_size=8, n_kv=1, head_dim=4,
+                      n_layers=1, max_seqs=8, pages_per_seq=4)
+
+
+class RoundRobinPreempt(PlacementPolicy):
+    """Adversarial policy: preempt one running request from a rotating
+    tenant every epoch — maximal evict/re-queue churn."""
+
+    name = "rr-preempt"
+
+    def __init__(self, epoch_steps=2):
+        super().__init__(epoch_steps)
+        self._turn = 0
+
+    def _decide(self, view):
+        d = super()._decide(view)
+        ts = sorted(view.running)
+        if not ts:
+            return d
+        t = ts[self._turn % len(ts)]
+        self._turn += 1
+        return dataclasses.replace(d, preempt={t: 1}, rung="preempt")
+
+
+def _run(seed, n_reqs, n_tenants, max_new, spike):
+    rng = np.random.RandomState(seed)
+    plan = None
+    if spike:
+        plan = ServingFaultPlan(seed=seed, faults=(
+            ServingFault("pool_spike", step=3, duration=6,
+                         pages=POOL.n_pages),))
+    eng = ServingEngine(
+        stub_model_config(), None, None, POOL,
+        EngineConfig(max_batch=4, max_running=6, backoff_seed=seed,
+                     fault_plan=plan),
+        placement=RoundRobinPreempt(), forwards=stub_forwards())
+    for i in range(n_reqs):
+        eng.submit(Request(rid=i, tenant=int(rng.randint(n_tenants)),
+                           prompt=rng.randint(0, 64, 8),
+                           max_new=int(1 + rng.randint(max_new))))
+        eng.step()
+    eng.run_until_drained(max_steps=2000)
+    return eng
+
+
+@settings(max_examples=12, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 12), st.integers(1, 4),
+       st.integers(1, 20), st.booleans())
+def test_property_conservation_and_exact_release(seed, n_reqs, n_tenants,
+                                                 max_new, spike):
+    """No request is ever lost or duplicated across preemption cycles,
+    every request fully decodes, and every KV page is released exactly
+    once (pool and slot list return to pristine after drain)."""
+    eng = _run(seed, n_reqs, n_tenants, max_new, spike)
+    cons = smet.conservation_report(eng)
+    assert cons["ok"], cons
+    assert cons["finished"] == n_reqs and cons["pending"] == 0
+    for r in eng.finished:
+        assert r.decoded == min(r.max_new, eng.ecfg.decode_len_cap)
+    assert kvc.pool_pressure(POOL, eng.pool).free_pages == POOL.n_pages
+    assert sorted(eng._free_slots) == list(range(POOL.max_seqs))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(0, 2 ** 20), st.integers(0, 2 ** 20),
+       st.integers(1, 8), st.integers(1, 8))
+def test_property_backoff_deterministic_bounded(seed, rid, retries, base):
+    a = backoff_steps(seed, rid, retries, base)
+    assert a == backoff_steps(seed, rid, retries, base)
+    lo = base * 2 ** max(retries - 1, 0)
+    assert lo <= a < lo + max(base, 1)

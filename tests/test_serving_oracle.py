@@ -92,7 +92,7 @@ class FakeOracle:
         self.table = table              # frozenset(tenants) -> max_slowdown
         self.slots = slots
 
-    def predict(self, candidates, profiles):
+    def predict(self, candidates, profiles, pool_pressure=0.0):
         out = []
         for c in candidates:
             c = tuple(sorted(c))

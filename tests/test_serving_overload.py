@@ -1,0 +1,414 @@
+"""Overload-tolerance laws (PR 10), deterministic tier-1 coverage:
+
+* degradation ladder — quota / preempt / freeze rungs fire at their
+  pool-pressure watermarks, in order, and freeze re-decides every step
+* preemption — KV pages released exactly once, request conservation
+  across evict/re-queue, seeded deterministic backoff, bounded retry
+  budget (budget-exhausted requests become preemption-immune)
+* safe mode — persistent prediction error degrades oracle -> static ->
+  admit-all with hysteresis, and recovery re-engages
+* serving fault injection — pool spikes occupy/release phantom pages,
+  oracle stalls produce the "stalled" rung, poisoned profiles bust the
+  oracle's tenant cache and restore afterwards
+* churn staleness — a retired tenant leaves the oracle's memoized
+  key-space immediately; a reused id re-resolves fresh
+* many-tenant scale — the wide churn preset drives dozens of tenant
+  lifecycles through one engine without losing a request
+
+The property-based (hypothesis) versions of the conservation laws live
+in test_preemption_properties.py; this module is the always-run core.
+"""
+import dataclasses
+
+import numpy as np
+
+from repro.memmgr import kv_cache as kvc
+from repro.serving import metrics as smet
+from repro.serving import stream as strm
+from repro.serving.engine import (EngineConfig, Request, ServingEngine,
+                                  backoff_steps, stub_forwards,
+                                  stub_model_config)
+from repro.serving.oracle import ContentionOracle, Recalibrator
+from repro.serving.placement import (RUNGS, EngineView, OraclePlacement,
+                                     PlacementPolicy)
+from repro.sim.faults import (SERVING_FAULT_KINDS, ServingFault,
+                              ServingFaultPlan, random_serving_plan)
+from tests.test_serving_oracle import FakeOracle
+
+POOL = kvc.PoolConfig(n_pages=64, page_size=8, n_kv=1, head_dim=4,
+                      n_layers=1, max_seqs=8, pages_per_seq=4)
+
+
+def _engine(ecfg=None, placement=None, profiles=None, pool=POOL,
+            solo_hint=None):
+    return ServingEngine(stub_model_config(), None, None, pool,
+                         ecfg or EngineConfig(max_batch=4),
+                         placement=placement, profiles=profiles,
+                         forwards=stub_forwards(), solo_hint=solo_hint)
+
+
+def _req(rid, tenant, plen=8, max_new=4):
+    rng = np.random.RandomState(rid)
+    return Request(rid=rid, tenant=tenant,
+                   prompt=rng.randint(0, 64, plen), max_new=max_new)
+
+
+def _view(step=8, queued=None, running=None, pressure=0.1,
+          pages_by_tenant=None, max_batch=8, max_running=0,
+          profiles=None):
+    queued = queued or {}
+    return EngineView(
+        step=step, max_batch=max_batch, queued=queued,
+        running=running or {}, waiting_since={t: 0 for t in queued},
+        pool_used_frac=pressure, pool_free_seqs=8,
+        profiles=profiles or {0: "heavy", 1: "interactive"},
+        pages_by_tenant=pages_by_tenant or {},
+        max_running=max_running)
+
+
+FAIR = FakeOracle({frozenset({0}): 1.0, frozenset({1}): 1.0,
+                   frozenset({0, 1}): 1.05})
+UNFAIR = FakeOracle({frozenset({0}): 1.0, frozenset({1}): 1.0,
+                     frozenset({0, 1}): 2.0})
+
+
+# ------------------------------------------------------------- ladder
+def test_rung_normal_below_watermarks():
+    pol = OraclePlacement(FAIR)
+    d = pol.refresh(_view(queued={0: 3, 1: 1}, pressure=0.2))
+    assert d.rung == "normal" and not d.preempt
+
+
+def test_rung_quota_tightens_decode_shares():
+    pol = OraclePlacement(FAIR)
+    lo = pol.refresh(_view(queued={0: 3, 1: 1}, pressure=0.2))
+    pol2 = OraclePlacement(FAIR)
+    hi = pol2.refresh(_view(queued={0: 3, 1: 1}, pressure=0.8))
+    assert hi.rung == "quota"
+    assert sum(hi.decode_quota.values()) <= sum(lo.decode_quota.values())
+    assert all(q >= 1 for q in hi.decode_quota.values())
+
+
+def test_rung_preempt_under_pressure_targets_page_heaviest():
+    pol = OraclePlacement(FAIR)
+    d = pol.refresh(_view(queued={0: 3, 1: 1}, running={0: 4, 1: 1},
+                          pressure=0.93,
+                          pages_by_tenant={0: 40, 1: 4}))
+    assert d.rung == "preempt"
+    assert d.preempt == {0: 1}            # page-heaviest tenant evicted
+
+
+def test_rung_freeze_blocks_admission_and_redecides_every_step():
+    pol = OraclePlacement(FAIR)
+    d = pol.refresh(_view(queued={0: 3, 1: 1}, running={0: 4},
+                          pressure=0.99, pages_by_tenant={0: 60}))
+    assert d.rung == "freeze"
+    assert d.allowed == () and d.default_cap == 0
+    assert not pol.may_admit(0, 0)
+    assert pol.due(pol._last_step + 1)    # frozen -> re-decide next step
+    # pressure receded -> the very next refresh unfreezes
+    d2 = pol.refresh(_view(step=9, queued={0: 3, 1: 1}, pressure=0.2))
+    assert d2.rung != "freeze" and d2.allowed
+
+
+def test_fairness_preemption_needs_full_running_set():
+    """Fairness-triggered preemption (predicted slowdown over the
+    threshold on the placement actually applied — the saturating-flood
+    shape, where every candidate is bad and the pair is least-bad) only
+    fires when admission caps can no longer help: running set full AND
+    the victim has queued work."""
+    saturated = FakeOracle({frozenset({0}): 2.5, frozenset({1}): 2.5,
+                            frozenset({0, 1}): 2.0})
+    pol = OraclePlacement(saturated, preempt_slowdown=1.6)
+    # not full: caps handle it, no eviction
+    d = pol.refresh(_view(queued={0: 3, 1: 1}, running={0: 2, 1: 1},
+                          max_batch=8, pressure=0.2))
+    assert d.chosen.tenants == (0, 1) and not d.preempt
+    # full + victim queued: evict from the aggressor (min-slowdown side)
+    d = pol.refresh(_view(step=30, queued={0: 3, 1: 2},
+                          running={0: 7, 1: 1}, max_batch=8,
+                          pressure=0.2))
+    assert d.preempt == {0: 1} and d.rung == "preempt"
+
+
+def test_ladder_rungs_are_declared():
+    for d_rung in ("normal", "quota", "preempt", "freeze",
+                   "stalled", "safe_static", "safe_open"):
+        assert d_rung in RUNGS
+
+
+# ------------------------------------------------------- preemption
+def _preempting_policy(tenant=0, epoch_steps=2):
+    class Force(PlacementPolicy):
+        name = "force"
+
+        def _decide(self, view):
+            d = super()._decide(view)
+            return dataclasses.replace(
+                d, preempt={tenant: 1} if view.running.get(tenant) else {},
+                rung="preempt" if view.running.get(tenant) else "normal")
+    return Force(epoch_steps=epoch_steps)
+
+
+def test_preemption_releases_pages_exactly_once():
+    eng = _engine(placement=_preempting_policy(0))
+    for i in range(3):
+        eng.submit(_req(i, 0, max_new=30))
+    free0 = kvc.pool_pressure(POOL, eng.pool).free_pages
+    eng.run_until_drained(max_steps=400)
+    assert eng.preemptions > 0
+    assert eng.pending() == 0
+    # every page came back exactly once: pool fully free after drain
+    assert kvc.pool_pressure(POOL, eng.pool).free_pages == free0 == \
+        POOL.n_pages
+    assert len(eng._free_slots) == POOL.max_seqs
+    cons = smet.conservation_report(eng)
+    assert cons["ok"], cons
+
+
+def test_preempted_request_conserved_and_reaccounted():
+    eng = _engine(placement=_preempting_policy(0, epoch_steps=4))
+    eng.submit(_req(0, 0, max_new=20))
+    eng.run_until_drained(max_steps=400)
+    (r,) = eng.finished
+    assert r.retries > 0
+    assert r.wasted_tokens > 0            # discarded work is accounted
+    assert r.decoded == 20                # ...and fully redone
+    assert r.first_token_step >= 0        # TTFT anchors the FIRST prefill
+
+
+def test_retry_budget_grants_immunity_never_drops():
+    eng = _engine(EngineConfig(max_batch=4, max_retries=2),
+                  placement=_preempting_policy(0, epoch_steps=2))
+    eng.submit(_req(0, 0, max_new=60))
+    eng.run_until_drained(max_steps=600)
+    (r,) = eng.finished
+    assert r.retries == 2                 # stopped AT the budget
+    assert r.decoded == 60
+
+
+def test_backoff_deterministic_and_exponential():
+    a = [backoff_steps(7, 3, k, base=2) for k in range(1, 6)]
+    b = [backoff_steps(7, 3, k, base=2) for k in range(1, 6)]
+    assert a == b                         # seeded: bit-identical
+    base = [2 * 2 ** (k - 1) for k in range(1, 6)]
+    assert all(bk <= ak < bk + 2 for ak, bk in zip(a, base))
+    assert backoff_steps(8, 3, 1, 2) != backoff_steps(7, 3, 1, 2) or \
+        backoff_steps(8, 4, 1, 2) != backoff_steps(7, 4, 1, 2)
+
+
+def test_unparked_requests_rejoin_queue_front():
+    eng = _engine()
+    vic = _req(0, 0)
+    vic.backoff_until = 0
+    eng.parked.append(vic)
+    eng.submit(_req(1, 0))
+    eng._unpark()
+    assert [r.rid for r in eng.queues[0]] == [0, 1]
+    assert not eng.parked
+
+
+# ---------------------------------------------------------- safe mode
+def test_safe_mode_degrades_and_reengages_with_hysteresis():
+    pol = OraclePlacement(UNFAIR, degrade_error=0.5, reengage_error=0.2,
+                          error_window=2,
+                          recalibrator=Recalibrator(alpha=0.01))
+    view = _view(queued={0: 3, 1: 1}, pressure=0.2)
+    pol.refresh(view)
+    # two bad epochs (full window) -> level 1 (static caps)
+    for _ in range(2):
+        pol.observe({0: 8.0, 1: 8.0})
+        pol.refresh(view)
+    assert pol.safe_level == 1
+    d = pol.decision
+    assert d.rung == "safe_static"
+    # two more -> level 2 (admit-all), rung safe_open
+    for _ in range(2):
+        pol.observe({0: 8.0, 1: 8.0})
+        pol.refresh(view)
+    assert pol.safe_level == 2
+    assert pol.decision.rung == "safe_open"
+    # shadow predictions still run: epochs matching the shadow
+    # prediction (~1.0 here) re-engage one level at a time
+    for _ in range(2):
+        pol.observe({0: 1.0, 1: 1.0})
+        pol.refresh(view)
+    assert pol.safe_level == 1
+    for _ in range(2):
+        pol.observe({0: 1.0, 1: 1.0})
+        pol.refresh(view)
+    assert pol.safe_level == 0
+    assert [lvl for _, lvl, _ in pol.mode_log] == [1, 2, 1, 0]
+
+
+def test_safe_mode_requires_full_window():
+    pol = OraclePlacement(UNFAIR, degrade_error=0.5, reengage_error=0.2,
+                          error_window=3)
+    view = _view(queued={0: 3, 1: 1})
+    pol.refresh(view)
+    pol.observe({0: 50.0, 1: 50.0})      # one horrible epoch
+    assert pol.safe_level == 0           # ...is not enough evidence
+
+
+def test_recalibrator_bounded_and_shrinks_error():
+    rec = Recalibrator(alpha=0.5, bounds=(0.5, 4.0), max_step=1.5)
+    for _ in range(40):
+        rec.observe({0: 3.0}, {0: 1.0})  # oracle 3x optimistic
+    assert rec.correction(0) <= 4.0      # range-clamped
+    assert rec.correction(0) > 2.0       # ...but converging toward 3x
+    rec.observe({0: float("nan")}, {0: 1.0})
+    assert rec.rejected >= 1             # garbage feedback never lands
+
+
+# ------------------------------------------------------ fault plans
+def test_pool_spike_occupies_then_releases():
+    plan = ServingFaultPlan(seed=0, faults=(
+        ServingFault("pool_spike", step=2, duration=4,
+                     pages=POOL.n_pages),))
+    eng = _engine(EngineConfig(max_batch=4, fault_plan=plan))
+    eng.submit(_req(0, 0, max_new=40))
+    for _ in range(3):
+        eng.step()
+    spiked = kvc.pool_pressure(POOL, eng.pool)
+    # the spike grabbed every free seq slot's worth of pages (slot-bound
+    # on this geometry: 7 free slots x 4 pages on top of the live seq)
+    assert spiked.pages_by_tenant.get(kvc.PHANTOM_ASID, 0) >= 24
+    assert spiked.free_seqs == 0
+    assert kvc.PHANTOM_ASID not in eng.view().pages_by_tenant
+    eng.run_until_drained(max_steps=300)
+    assert kvc.pool_pressure(POOL, eng.pool).free_pages == POOL.n_pages
+    assert smet.conservation_report(eng)["ok"]
+    assert ("pool_spike" in {k for _, k, _ in eng.fault_log})
+
+
+def test_oracle_stall_fault_yields_stalled_rung():
+    plan = ServingFaultPlan(seed=0, faults=(
+        ServingFault("oracle_stall", step=2, duration=8),))
+    pol = OraclePlacement(FAIR, epoch_steps=4)
+    eng = _engine(EngineConfig(max_batch=4, fault_plan=plan),
+                  placement=pol,
+                  profiles={0: "heavy", 1: "interactive"})
+    for i in range(4):
+        eng.submit(_req(i, i % 2, max_new=12))
+    for _ in range(16):
+        eng.step()
+    rungs = smet.rung_counts(eng.decisions)
+    assert rungs.get("stalled", 0) >= 1
+    eng.run_until_drained(max_steps=200)
+    assert smet.conservation_report(eng)["ok"]
+
+
+def test_profile_poison_swaps_then_restores():
+    oracle = ContentionOracle(cycles=150, slots=2, pad_rows=8)
+    plan = ServingFaultPlan(seed=0, faults=(
+        ServingFault("profile_poison", step=3, duration=6, tenant=0,
+                     profile="interactive"),))
+    eng = _engine(EngineConfig(max_batch=4, fault_plan=plan),
+                  placement=OraclePlacement(oracle, epoch_steps=4),
+                  profiles={0: "heavy", 1: "interactive"})
+    for i in range(4):
+        eng.submit(_req(i, i % 2, max_new=16))
+    for _ in range(5):
+        eng.step()
+    assert eng.profiles[0] == "interactive"          # poisoned
+    assert oracle.tenant_benches().get(0) != "GUP"   # heavy's bench gone
+    for _ in range(8):
+        eng.step()
+    assert eng.profiles[0] == "heavy"                # restored
+    eng.run_until_drained(max_steps=200)
+    assert smet.conservation_report(eng)["ok"]
+
+
+def test_random_serving_plan_seeded_and_valid():
+    a = random_serving_plan(3, n_steps=64, tenants=(0, 1, 2))
+    b = random_serving_plan(3, n_steps=64, tenants=(0, 1, 2))
+    assert a == b
+    assert a != random_serving_plan(4, n_steps=64, tenants=(0, 1, 2))
+    for f in a.faults:
+        assert f.kind in SERVING_FAULT_KINDS
+    a.validate((0, 1, 2))
+
+
+def test_fault_run_bit_for_bit_deterministic():
+    def run():
+        plan = ServingFaultPlan(seed=1, faults=(
+            ServingFault("pool_spike", step=4, duration=6, pages=40),
+            ServingFault("oracle_stall", step=10, duration=4),))
+        pol = OraclePlacement(FakeOracle(dict(FAIR.table)), epoch_steps=4)
+        eng = _engine(EngineConfig(max_batch=4, max_running=6,
+                                   fault_plan=plan), placement=pol,
+                      profiles={0: "heavy", 1: "interactive"})
+        for i in range(6):
+            eng.submit(_req(i, i % 2, max_new=10))
+        eng.run_until_drained(max_steps=300)
+        return ([(r.rid, r.finish_step, r.retries) for r in eng.finished],
+                [(d.step, d.rung, d.allowed) for d in eng.decisions],
+                tuple(eng.fault_log), tuple(eng.preempt_log))
+    assert run() == run()
+
+
+# ------------------------------------------------- churn staleness
+def test_retire_tenant_evicts_oracle_cache_immediately():
+    oracle = ContentionOracle(cycles=150, slots=2, pad_rows=8)
+    pol = OraclePlacement(oracle, epoch_steps=4)
+    pol.refresh(_view(queued={0: 2, 1: 1},
+                      profiles={0: "heavy", 1: "interactive"}))
+    assert 0 in oracle.tenant_benches()
+    pol.recalibrator._corr[0] = 2.0
+    pol.retire(0)
+    assert 0 not in oracle.tenant_benches()          # evicted NOW
+    assert pol.recalibrator.correction(0) == 1.0     # calibration reset
+    assert pol.stale((1,))                           # re-decide early
+    # regression: the REUSED id re-resolves through its new profile
+    pol.refresh(_view(step=20, queued={0: 2, 1: 1},
+                      profiles={0: "batch", 1: "interactive"}))
+    from repro.sim.profiles import bench_for_profile
+    assert oracle.tenant_benches()[0] == bench_for_profile("batch")
+
+
+def test_engine_retire_tenant_walks_through_placement():
+    oracle = ContentionOracle(cycles=150, slots=2, pad_rows=8)
+    eng = _engine(placement=OraclePlacement(oracle, epoch_steps=4),
+                  profiles={0: "heavy", 1: "interactive"})
+    eng.submit(_req(0, 0, max_new=4))
+    eng.submit(_req(1, 1, max_new=4))
+    eng.run_until_drained(max_steps=100)
+    assert 0 in oracle.tenant_benches()
+    eng.retire_tenant(0)
+    assert 0 not in oracle.tenant_benches()
+    assert 0 not in eng.profiles
+
+
+# --------------------------------------------------------- streams
+def test_many_tenants_preset_is_wide():
+    tr = strm.make_trace("many_tenants", seed=0)
+    assert len(tr.specs) >= 20            # "tens of tenants"
+    assert len({s.tenant for s in tr.specs}) == len(tr.specs)
+
+
+def test_churn_preset_shares_sim_timeline():
+    from repro.sim.workloads import churn_schedule
+    tr = strm.make_trace("churn", seed=3)
+    sched = churn_schedule(seed=3, n_segments=6, n_slots=3,
+                           arrival_rate=0.5, departure_rate=0.3)
+    specs = strm.schedule_to_specs(sched, tr.steps // 6, rate=0.35,
+                                   prompt_lens=(8,), max_new=6)
+    assert tr.specs == specs              # one seeded timeline generator
+
+
+def test_drive_retires_departed_tenants_and_conserves():
+    tr = strm.make_trace("churn", seed=0, steps=60)
+    oracle = ContentionOracle(cycles=150, slots=4, pad_rows=16)
+    eng = _engine(EngineConfig(max_batch=4, max_running=6),
+                  placement=OraclePlacement(oracle, epoch_steps=6),
+                  profiles=tr.profiles(),
+                  pool=kvc.PoolConfig(n_pages=128, page_size=8, n_kv=1,
+                                      head_dim=4, n_layers=1, max_seqs=8,
+                                      pages_per_seq=4))
+    strm.drive(eng, tr, drain_steps=400)
+    assert smet.conservation_report(eng)["ok"]
+    # departed tenants (stop is not None and work drained) left the cache
+    gone = [s.tenant for s in tr.specs if s.stop is not None
+            and s.stop < eng.step_count]
+    live = oracle.tenant_benches()
+    assert gone and all(t not in live for t in gone)
